@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs pure-jnp oracle (CPU
+wall-time is NOT a TPU signal — recorded for regression tracking; correctness
+sweeps live in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip import ops as dp_ops, ref as dp_ref
+from repro.kernels.l1_distance import ops as l1_ops, ref as l1_ref
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 8192))
+    rows.append(("kernel_dp_clip_pallas_us",
+                 _time(lambda a: dp_ops.clip_accumulate_flat(a, 1.0), x), 16 * 8192))
+    rows.append(("kernel_dp_clip_ref_us",
+                 _time(lambda a: dp_ref.clip_accumulate(a, 1.0), x), 16 * 8192))
+    w = jax.random.normal(key, (16, 4096))
+    rows.append(("kernel_l1_pallas_us", _time(l1_ops.pairwise_l1, w), 16 * 16))
+    rows.append(("kernel_l1_ref_us", _time(l1_ref.pairwise_l1, w), 16 * 16))
+    for name, us, d in rows:
+        print(f"[kernels] {name} {us:.0f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Paper §4.5 — P4 overhead on constrained hardware: run time per phase,
+memory, and communication bandwidth (message bytes, pickle-serialized exactly
+like the paper's RPi setup). Power draw is hardware-gated → N/A.
+
+Paper reference points (RPi 4B, linear/CIFAR-10): phase-1 pair 0.04 s,
+35-peer sampling ≈1.4 s total; phase-2 pair 5.27 s; weights message 622.82 kB;
+phase-2 messages 1246.57 kB total.
+"""
+from __future__ import annotations
+
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core.grouping import pairwise_l1
+from repro.core.p2p import P2PNetwork, simulate_group_round, simulate_phase1
+from repro.core.p4 import P4Trainer
+from repro.core.scattering import scatter_feature_dim
+
+
+def run(quick: bool = True):
+    rows = []
+    # the paper's phase-2 device pair: linear model on CIFAR-10 ScatterNet
+    feat = scatter_feature_dim((32, 32, 3))       # 15552
+    classes = 10
+    cfg = RunConfig(dp=DPConfig(epsilon=15.0, rounds=100, sample_rate=0.5),
+                    p4=P4Config(group_size=2, sample_peers=1),
+                    train=TrainConfig(learning_rate=0.5))
+    trainer = P4Trainer(feat_dim=feat, num_classes=classes, cfg=cfg)
+    M = 2
+    key = jax.random.PRNGKey(0)
+    states = trainer.init_clients(key, M)
+    xs = jax.random.normal(key, (M, 32, feat))
+    ys = jax.random.randint(key, (M, 32), 0, classes)
+
+    # ---- phase 1: similarity computation + message ------------------------
+    net = P2PNetwork(M)
+    one_client_params = jax.tree_util.tree_map(lambda t: t[0], states["proxy"])
+    t_msg = simulate_phase1(net, one_client_params, [(0, 1)])
+    w = jnp.stack([jnp.concatenate([states["proxy"]["w"][i].ravel(),
+                                    states["proxy"]["b"][i]]) for i in range(M)])
+    with Timer() as t1:
+        d = pairwise_l1(w)
+        d.block_until_ready()
+    phase1_pair_s = t1.dt + t_msg
+    rows.append(("overhead_phase1_pair_s", phase1_pair_s * 1e6, round(phase1_pair_s, 4)))
+    rows.append(("overhead_phase1_35peers_s", 0.0, round(35 * phase1_pair_s, 3)))
+    msg_kb = net.total_bytes("phase1_weights") / 1e3
+    rows.append(("overhead_phase1_msg_kB", 0.0, round(msg_kb, 2)))
+
+    # ---- phase 2: one co-training round between two clients ---------------
+    trainer.local_round(states, xs, ys, key)      # compile once
+    with Timer() as t2:
+        states2, _ = trainer.local_round(states, xs, ys, jax.random.fold_in(key, 1))
+        jax.tree_util.tree_leaves(states2)[0].block_until_ready()
+    simulate_group_round(net, [0, 1], one_client_params, rnd=0)
+    phase2_kb = net.total_bytes("proxy_update") / 1e3 + net.total_bytes("aggregated_model") / 1e3
+    rows.append(("overhead_phase2_round_s", t2.dt * 1e6, round(t2.dt, 4)))
+    rows.append(("overhead_phase2_msgs_kB", 0.0, round(phase2_kb, 2)))
+
+    # ---- memory ------------------------------------------------------------
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    rows.append(("overhead_peak_rss_MB", 0.0, round(peak_mb, 1)))
+    rows.append(("overhead_power_W", 0.0, "NA-hardware-gated"))
+
+    print(f"[overhead] phase1_pair={phase1_pair_s:.3f}s phase1_msg={msg_kb:.1f}kB "
+          f"phase2_round={t2.dt:.3f}s phase2_msgs={phase2_kb:.1f}kB "
+          f"rss={peak_mb:.0f}MB", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

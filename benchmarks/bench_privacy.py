@@ -1,0 +1,57 @@
+"""Paper Fig. 7 — P4 accuracy across privacy budgets ε ∈ [3, 20] vs non-DP
+local training (with and without handcrafted features), alpha-based γ=50%.
+
+Claim validated: P4 beats local training even at ε = 3, and degrades
+gracefully as ε tightens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, client_split, feature_pool
+from repro.baselines import local
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core.p4 import P4Trainer
+
+
+def run(quick: bool = True, dataset: str = "femnist"):
+    rows = []
+    M, R = (16, 96) if quick else (32, 160)
+    rounds = 40 if quick else 100
+    batch = 24
+    feats, rawf, labels, stats = feature_pool(dataset, 60 if quick else 120)
+    trx, try_, tex, tey = client_split(feats, labels, M=M, R=R,
+                                       mode="alpha", level=0.5)
+    rtrx, rtry, rtex, rtey = client_split(rawf, labels, M=M, R=R,
+                                          mode="alpha", level=0.5)
+    tex_j, tey_j = jnp.asarray(tex), jnp.asarray(tey)
+
+    # local baselines (no DP — data never leaves the client)
+    _, h = local.train(trx, try_, tex_j, tey_j, rounds=rounds, lr=0.5,
+                       batch_size=batch, eval_every=max(rounds - 1, 1))
+    rows.append(("privacy_local_hc", 0.0, round(h[-1][1], 4)))
+    _, h = local.train(rtrx, rtry, jnp.asarray(rtex), jnp.asarray(rtey),
+                       rounds=rounds, lr=0.05, batch_size=batch,
+                       eval_every=max(rounds - 1, 1))
+    rows.append(("privacy_local_raw", 0.0, round(h[-1][1], 4)))
+
+    for eps in ([3, 15] if quick else [3, 5, 10, 15, 20]):
+        cfg = RunConfig(dp=DPConfig(epsilon=float(eps), rounds=rounds,
+                                    sample_rate=batch / R),
+                        p4=P4Config(group_size=4, sample_peers=min(10, M - 1)),
+                        train=TrainConfig(learning_rate=0.5))
+        tr = P4Trainer(feat_dim=trx.shape[-1], num_classes=stats["L"], cfg=cfg)
+        with Timer() as t:
+            _, _, hist = tr.fit(trx, try_, tex_j, tey_j, rounds=rounds,
+                                eval_every=max(rounds - 1, 1), batch_size=batch)
+        rows.append((f"privacy_p4_eps{eps}", t.dt * 1e6 / rounds,
+                     round(hist[-1][1], 4)))
+        print(f"[privacy] eps={eps} p4={hist[-1][1]:.3f} sigma={tr.sigma:.2f}",
+              flush=True)
+    print(f"[privacy] local_hc={rows[0][2]} local_raw={rows[1][2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,66 @@
+"""§Roofline table — renders the dry-run sweep (results/dryrun_sweep.jsonl)
+into the per-(arch × shape × mesh) roofline report: three terms, dominant
+bottleneck, MODEL_FLOPS ratio, and what would move the dominant term."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_sweep.jsonl")
+
+_ADVICE = {
+    "compute_s": "already compute-bound — only lower-precision math or fewer "
+                 "model FLOPs (e.g. no remat, causal-skip attention) help",
+    "memory_s": "fuse elementwise chains / keep activations bf16 / larger "
+                "per-chip batch to amortize weight streaming",
+    "collective_s": "reshard to cut all-gathers (e.g. 2D FSDP->1D, EP-friendly "
+                    "dispatch) or overlap collectives with compute",
+}
+
+
+def load(path=RESULTS):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    # keep the newest entry per combo key
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"], r.get("p4", False),
+               tuple(r.get("variant", ())))] = r
+    return list(dedup.values())
+
+
+def run(quick: bool = True):
+    rows = []
+    data = load()
+    if not data:
+        print("[roofline] no sweep results yet (run repro.launch.sweep)")
+        return [("roofline_combos", 0.0, 0)]
+    data.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print(f"{'arch':26s} {'shape':12s} {'mesh':8s} {'compute':>9s} {'memory':>9s}"
+          f" {'collective':>11s} {'bottleneck':>12s} {'useful':>7s}")
+    for r in data:
+        t = r["roofline"]
+        useful = r.get("useful_flops_ratio")
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s}"
+              f" {t['compute_s']:9.4f} {t['memory_s']:9.4f}"
+              f" {t['collective_s']:11.4f} {t['bottleneck'][:-2]:>12s}"
+              f" {useful if useful is None else round(useful, 3)!s:>7s}")
+        rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                     t[t["bottleneck"]] * 1e6 if t["bottleneck"] in t else 0.0,
+                     t["bottleneck"]))
+    n_combo = len({(r['arch'], r['shape']) for r in data})
+    n_multi = len([r for r in data if r["mesh"] == "2x16x16"])
+    print(f"[roofline] combos={n_combo} multi-pod rows={n_multi}")
+    rows.append(("roofline_combos", 0.0, n_combo))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

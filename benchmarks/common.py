@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: cached ScatterNet feature pools + the paper's
+client-partition setups at benchmark scale.
+
+Scale note (DESIGN.md gate table): the paper's full setup is M=200–260
+clients × R=200–300 samples. On this 1-core container we default to M=16,
+R=96 with the same partitioners — orderings and deltas are the claim being
+validated, not absolute accuracy.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.scattering import scatternet_features
+from repro.data.partition import alpha_partition, shard_partition
+from repro.data.pipeline import stack_client_data, train_test_split
+from repro.data.synthetic import make_image_task_pool
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def feature_pool(dataset: str, samples_per_class: int = 60, seed: int = 0,
+                 raw: bool = False, noise: float = 0.9):
+    """(features, raw_images_flat, labels, stats) with on-disk caching —
+    ScatterNet on 1 CPU core is the slow step (~1 min per pool).
+
+    noise=0.9 puts per-client local training in the data-starved regime the
+    paper operates in (collaboration must help; with clean templates a local
+    linear probe saturates and no method can beat it)."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    tag = f"{dataset}_{samples_per_class}_{seed}_{noise}"
+    path = os.path.join(CACHE_DIR, f"features_{tag}.npz")
+    if os.path.exists(path):
+        z = np.load(path, allow_pickle=True)
+        return z["feats"], z["raw"], z["labels"], z["stats"].item()
+    imgs, labels, stats = make_image_task_pool(dataset, seed=seed,
+                                               samples_per_class=samples_per_class,
+                                               noise=noise)
+    feats = []
+    for i in range(0, len(imgs), 256):
+        feats.append(np.asarray(scatternet_features(jnp.asarray(imgs[i:i + 256]))))
+    feats = np.concatenate(feats)
+    rawf = imgs.reshape(len(imgs), -1)
+    rawf = (rawf - rawf.mean()) / (rawf.std() + 1e-6)
+    np.savez(path, feats=feats, raw=rawf, labels=labels, stats=stats)
+    return feats, rawf, labels, stats
+
+
+def client_split(features, labels, *, M: int, R: int, mode: str, level,
+                 seed: int = 0):
+    """Partition a pool into per-client train/test stacks.
+
+    mode='shard' → level = N classes per client; mode='alpha' → level = γ."""
+    if mode == "shard":
+        idxs = shard_partition(labels, M, int(level), R, seed)
+    else:
+        idxs = alpha_partition(labels, M, float(level), R, seed)
+    tr, te = zip(*[train_test_split(idx, 0.2, seed) for idx in idxs])
+    n_tr = min(len(t) for t in tr)
+    n_te = min(len(t) for t in te)
+    trx, try_ = stack_client_data(features, labels, list(tr), n_tr)
+    tex, tey = stack_client_data(features, labels, list(te), n_te)
+    return trx, try_, tex, tey
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure (+ roofline/kernels).
+
+  bench_heterogeneity  Figs. 2/3/5/6   accuracy vs heterogeneity, all methods
+  bench_privacy        Fig. 7          accuracy vs ε, P4 vs local
+  bench_ablation       Fig. 8          component ablation
+  bench_overhead       §4.5            phase run time / bytes / memory
+  bench_roofline       §Roofline       dry-run-derived terms per combo
+  bench_kernels        (framework)     Pallas-vs-oracle microbench
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_ablation, bench_heterogeneity, bench_kernels,
+                            bench_overhead, bench_privacy, bench_roofline)
+    suites = {
+        "kernels": bench_kernels.run,
+        "overhead": bench_overhead.run,
+        "roofline": bench_roofline.run,
+        "privacy": bench_privacy.run,
+        "ablation": bench_ablation.run,
+        "heterogeneity": bench_heterogeneity.run,
+    }
+    rows = []
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            rows.extend(fn(quick=quick))
+        except Exception as e:  # a failing suite must not hide the others
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            rows.append((f"{name}_FAILED", 0.0, type(e).__name__))
+        print(f"===== {name} done in {time.time()-t0:.0f}s =====", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

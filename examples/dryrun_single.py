@@ -1,0 +1,18 @@
+"""Lower + compile ONE (arch × shape) onto the production mesh and print its
+roofline terms — the per-combo view of the multi-pod dry-run.
+
+Run:  PYTHONPATH=src python examples/dryrun_single.py [arch] [shape] [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import lower_combo
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    result = lower_combo(arch, shape, multi_pod="--multi-pod" in sys.argv)
+    print("\nuseful-FLOPs ratio:", result["useful_flops_ratio"])
+    print("notes:", result["notes"])

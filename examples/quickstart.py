@@ -1,0 +1,51 @@
+"""Quickstart: the P4 pipeline end-to-end in ~2 minutes on CPU.
+
+16 clients × shard-based non-IID synthetic FEMNIST → ScatterNet features →
+Phase 1 (ℓ1 grouping) → Phase 2 (DP proxy/private co-training) → per-client
+personalized accuracy vs a local-only baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core.p4 import P4Trainer
+from repro.core.scattering import scatternet_features
+from repro.data import make_image_task_pool, shard_partition
+from repro.data.pipeline import stack_client_data, train_test_split
+from repro.baselines import local
+
+M, R, ROUNDS = 16, 64, 40
+
+print("1) synthetic FEMNIST-like pool + ScatterNet features ...")
+imgs, labels, stats = make_image_task_pool("femnist", samples_per_class=60, M=M, R=R)
+feats = np.concatenate([np.asarray(scatternet_features(jnp.asarray(imgs[i:i+256])))
+                        for i in range(0, len(imgs), 256)])
+
+print("2) shard-based non-IID partition (N=2 classes/client) ...")
+clients = shard_partition(labels, M, classes_per_client=2, samples_per_client=R)
+tr, te = zip(*[train_test_split(c) for c in clients])
+trx, try_ = stack_client_data(feats, labels, list(tr), 48)
+tex, tey = stack_client_data(feats, labels, list(te), 12)
+
+print("3) P4: group formation + DP co-training (eps=15) ...")
+cfg = RunConfig(dp=DPConfig(epsilon=15.0, rounds=ROUNDS, sample_rate=0.5),
+                p4=P4Config(group_size=4, sample_peers=8),
+                train=TrainConfig(learning_rate=0.5))
+trainer = P4Trainer(feat_dim=trx.shape[-1], num_classes=stats["L"], cfg=cfg)
+states, groups, hist = trainer.fit(trx, try_, jnp.asarray(tex), jnp.asarray(tey),
+                                   rounds=ROUNDS, eval_every=10)
+print(f"   groups: {groups}")
+for r, acc in hist:
+    print(f"   round {r:3d}  mean personalized accuracy {acc:.3f}")
+
+print("4) local-only baseline (no collaboration) ...")
+_, lh = local.train(trx, try_, jnp.asarray(tex), jnp.asarray(tey),
+                    rounds=ROUNDS, lr=0.5, batch_size=24, eval_every=ROUNDS - 1)
+print(f"   local final accuracy {lh[-1][1]:.3f}")
+print(f"\nP4 {hist[-1][1]:.3f} vs local {lh[-1][1]:.3f} "
+      f"(paper: P4 wins under heterogeneity, and it should here too)")

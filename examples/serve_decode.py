@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a prompt batch then decode greedily with
+the KV cache, on a reduced mixtral (MoE + sliding-window attention).
+
+Equivalent CLI:  PYTHONPATH=src python -m repro.launch.serve \
+    --arch mixtral-8x22b --reduced --batch 4 --prompt-len 64 --gen 32
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "mixtral-8x22b", "--reduced",
+                "--batch", "2", "--prompt-len", "32", "--gen", "16"]
+    serve_mod.main()

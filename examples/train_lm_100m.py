@@ -1,0 +1,22 @@
+"""End-to-end driver (brief §b): train a ~100M-param llama3.2-family model
+for a few hundred steps on the synthetic structured token stream; loss must
+fall well below ln(vocab).
+
+Equivalent CLI:  PYTHONPATH=src python -m repro.launch.train \
+    --arch llama3.2-1b --m100 --steps 200 --batch 4 --seq 256
+
+P4 variant (dual-model DP co-training across 2 simulated groups):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+    --reduced --p4 --groups 2 --steps 50
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_mod
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3.2-1b", "--m100",
+                "--steps", os.environ.get("STEPS", "200"),
+                "--batch", "4", "--seq", "256", "--lr", "1e-3",
+                "--ckpt-dir", "results/ckpt_100m"]
+    train_mod.main()

@@ -1,0 +1,15 @@
+"""repro — P4 (Private, Personalized, Peer-to-Peer learning) as a multi-pod JAX framework.
+
+Layers:
+  repro.core      — the paper's contribution (scattering features, DP, KD, grouping, P4 step)
+  repro.models    — transformer/MoE/SSM/hybrid substrate for the assigned architectures
+  repro.baselines — the paper's comparison methods (FedAvg, Scaffold, ProxyFL, DP-DSGT, ...)
+  repro.data      — synthetic non-IID task generators + LM token pipeline
+  repro.optim     — pure-JAX optimizers and schedules
+  repro.sharding  — logical-axis sharding rules
+  repro.kernels   — Pallas TPU kernels (dp_clip, l1_distance, flash_attention)
+  repro.configs   — assigned architecture configs + the paper's own models
+  repro.launch    — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""The paper's comparison methods (§4.2.1), all in JAX on the same substrate:
+
+  local        — per-client training, no communication (strong non-IID baseline)
+  centralized  — pooled-data upper reference (with/without HC features)
+  fedavg       — DP-FedAvg (server honest-but-curious, RDP-accounted noise)
+  scaffold     — DP-SCAFFOLD (Noble et al. 2022): control variates + DP
+  proxyfl      — Kalra et al. 2023: proxy sharing over a directed exponential graph
+  dp_dsgt      — Bayrooti et al. 2023: DP decentralized SGD with gradient tracking
+"""
+from repro.baselines.common import evaluate_clients, sgd_update
+from repro.baselines import local, centralized, fedavg, scaffold, proxyfl, dp_dsgt

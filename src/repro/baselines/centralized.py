@@ -1,0 +1,38 @@
+"""Centralized baseline: all data pooled, one model, no privacy (paper's
+'optimal scenario' reference, §4.2.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import common
+from repro.core.small_models import accuracy
+
+
+def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
+          batch_size: int = 256, seed: int = 0, eval_every: int = 20):
+    """train_x: pooled (N, feat); test per-client (M, n, feat) so we report the
+    same per-client-mean accuracy metric as every other method."""
+    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
+    specs, apply_fn = common.make_model(feat, classes)
+    params = jax.tree_util.tree_map(
+        lambda s: s, common.init_clients(specs, jax.random.PRNGKey(seed), 1))
+    params = jax.tree_util.tree_map(lambda t: t[0], params)
+    rng = np.random.default_rng(seed)
+    loss = common.ce_loss(apply_fn)
+
+    @jax.jit
+    def step(params, x, y):
+        g = jax.grad(loss)(params, {"x": x, "y": y})
+        return common.sgd_update(params, g, lr)
+
+    history = []
+    N = train_x.shape[0]
+    for r in range(rounds):
+        idx = rng.integers(0, N, batch_size)
+        params = step(params, jnp.asarray(train_x[idx]), jnp.asarray(train_y[idx]))
+        if r % eval_every == 0 or r == rounds - 1:
+            acc = jax.vmap(lambda x, y: accuracy(apply_fn(params, x), y))(test_x, test_y)
+            history.append((r, float(jnp.mean(acc))))
+    return params, history

@@ -1,0 +1,72 @@
+"""Shared machinery for the baseline trainers: every method trains ONE model
+per client (stacked (M, ...) pytrees) on the same features/data as P4."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp as dp_lib
+from repro.core.small_models import accuracy, linear_apply, linear_specs
+from repro.models.layers import softmax_cross_entropy
+from repro.models.module import init_params
+
+
+def make_model(feat_dim: int, num_classes: int):
+    specs = linear_specs(feat_dim, num_classes)
+    return specs, linear_apply
+
+
+def ce_loss(apply_fn):
+    def loss(params, batch):
+        return softmax_cross_entropy(apply_fn(params, batch["x"]), batch["y"])
+    return loss
+
+
+def sgd_update(params, grads, lr: float):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def client_grad(apply_fn, params, x, y, key, *, dp_cfg=None, sigma: float = 0.0,
+                use_pallas: bool = False):
+    """Gradient for one client, optionally DP (per-example clip + noise)."""
+    loss = ce_loss(apply_fn)
+    if dp_cfg is not None and dp_cfg.enabled and sigma > 0:
+        return dp_lib.dp_gradients(loss, params, {"x": x, "y": y}, key,
+                                   clip=dp_cfg.clip_norm, sigma=sigma,
+                                   microbatches=dp_cfg.microbatches,
+                                   use_pallas=use_pallas)
+    return jax.grad(loss)(params, {"x": x, "y": y})
+
+
+def init_clients(specs, key, M: int):
+    return jax.vmap(lambda k: init_params(specs, k))(jax.random.split(key, M))
+
+
+def evaluate_clients(apply_fn, stacked_params, xs, ys):
+    """(M,) per-client test accuracy."""
+    return jax.vmap(lambda p, x, y: accuracy(apply_fn(p, x), y))(stacked_params, xs, ys)
+
+
+def batch_sampler(train_x, train_y, batch_size: int, seed: int = 0):
+    M, R = train_y.shape
+    rng = np.random.default_rng(seed)
+
+    def sample():
+        idx = rng.integers(0, R, size=(M, batch_size))
+        gx = np.take_along_axis(train_x, idx[..., None], axis=1)
+        gy = np.take_along_axis(train_y, idx, axis=1)
+        return jnp.asarray(gx), jnp.asarray(gy)
+
+    return sample
+
+
+def tree_mean(stacked):
+    return jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0), stacked)
+
+
+def broadcast_like(tree, M: int):
+    return jax.tree_util.tree_map(
+        lambda t: jnp.broadcast_to(t[None], (M,) + t.shape), tree)

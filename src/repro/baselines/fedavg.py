@@ -1,0 +1,72 @@
+"""DP-FedAvg (McMahan et al. [35] + record-level DP toward an honest-but-
+curious server). Noise is RDP-accounted for the subsampled Gaussian over T
+rounds with user sampling ratio u (paper §4.2.1 / Noble et al.).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import common
+from repro.core import dp as dp_lib
+
+
+def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
+          batch_size: int = 32, seed: int = 0, eval_every: int = 20,
+          epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
+          user_ratio: float = 1.0, local_steps: int = 1, dp: bool = True):
+    M, R = train_y.shape
+    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
+    specs, apply_fn = common.make_model(feat, classes)
+    delta = delta or 1.0 / R
+    q = batch_size / R
+    sigma = dp_lib.calibrate_sigma(epsilon, delta, q, rounds * local_steps) if dp else 0.0
+
+    global_params = jax.tree_util.tree_map(
+        lambda t: t[0], common.init_clients(specs, jax.random.PRNGKey(seed), 1))
+    sample = common.batch_sampler(train_x, train_y, batch_size, seed)
+    rng = np.random.default_rng(seed + 7)
+
+    @jax.jit
+    def round_step(gp, xs, ys, key, mask):
+        params = common.broadcast_like(gp, M)
+
+        def one(p, x, y, k):
+            def body(pp, i):
+                g = common.client_grad(
+                    apply_fn, pp, x, y, jax.random.fold_in(k, i),
+                    dp_cfg=_DP(clip), sigma=sigma)
+                return common.sgd_update(pp, g, lr), None
+            p2, _ = jax.lax.scan(body, p, jnp.arange(local_steps))
+            return p2
+
+        new = jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
+        # server average over the sampled user cohort
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        avg = jax.tree_util.tree_map(
+            lambda n: jnp.einsum("m...,m->...", n, w), new)
+        return avg
+
+    history = []
+    key = jax.random.PRNGKey(seed + 1)
+    for r in range(rounds):
+        xs, ys = sample()
+        mask = (rng.random(M) < user_ratio).astype(np.float32)
+        if mask.sum() == 0:
+            mask[rng.integers(M)] = 1.0
+        global_params = round_step(global_params, xs, ys,
+                                   jax.random.fold_in(key, r), jnp.asarray(mask))
+        if r % eval_every == 0 or r == rounds - 1:
+            params = common.broadcast_like(global_params, M)
+            acc = common.evaluate_clients(apply_fn, params, test_x, test_y)
+            history.append((r, float(jnp.mean(acc))))
+    return global_params, history, sigma
+
+
+class _DP:
+    enabled = True
+    microbatches = 0
+
+    def __init__(self, clip):
+        self.clip_norm = clip

@@ -1,0 +1,38 @@
+"""Local training baseline: each client trains alone (paper §4.2.1).
+
+The paper runs it WITHOUT DP (local data never leaves the device, so no noise
+is needed) — the relevant comparison for Fig. 7.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import common
+
+
+def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
+          batch_size: int = 32, seed: int = 0, eval_every: int = 20,
+          dp_cfg=None, sigma: float = 0.0):
+    M = train_y.shape[0]
+    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
+    specs, apply_fn = common.make_model(feat, classes)
+    params = common.init_clients(specs, jax.random.PRNGKey(seed), M)
+    sample = common.batch_sampler(train_x, train_y, batch_size, seed)
+
+    @jax.jit
+    def step(params, xs, ys, key):
+        def one(p, x, y, k):
+            g = common.client_grad(apply_fn, p, x, y, k, dp_cfg=dp_cfg, sigma=sigma)
+            return common.sgd_update(p, g, lr)
+        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
+
+    history = []
+    key = jax.random.PRNGKey(seed + 1)
+    for r in range(rounds):
+        xs, ys = sample()
+        params = step(params, xs, ys, jax.random.fold_in(key, r))
+        if r % eval_every == 0 or r == rounds - 1:
+            acc = common.evaluate_clients(apply_fn, params, test_x, test_y)
+            history.append((r, float(jnp.mean(acc))))
+    return params, history

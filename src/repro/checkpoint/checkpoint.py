@@ -1,0 +1,74 @@
+"""Flat-npz pytree checkpointing with step metadata.
+
+Leaves are addressed by their tree path ("params/blocks/attn_attn/wq"); the
+treedef is reconstructed from the template pytree at restore time, so restore
+is shape- and dtype-checked against the current model definition.
+"""
+from __future__ import annotations
+
+import json
+import jax.numpy as jnp
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_seg(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":         # ml_dtypes (bf16, fp8, ...)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shape/dtype enforced)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(_seg(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

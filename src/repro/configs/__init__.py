@@ -1,0 +1,45 @@
+"""Architecture registry.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+cites its source in ``ModelConfig.source``. ``reduced()`` returns the smoke-
+test variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict
+
+from repro.config import ModelConfig
+
+_MODULES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-7b": "zamba2_7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen3-14b": "qwen3_14b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "granite-34b": "granite_34b",
+    "llama3.2-1b": "llama3_2_1b",
+    "xlstm-125m": "xlstm_125m",
+    "musicgen-large": "musicgen_large",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+}
+
+ARCHITECTURES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.config()
+    cfg.validate()
+    return cfg
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    """Smoke-test variant: same family/features, tiny dimensions."""
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.reduced()
+    cfg.validate()
+    return cfg

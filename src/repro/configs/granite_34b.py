@@ -1,0 +1,33 @@
+"""granite-34b [dense] — llama-arch code model, MQA (kv=1) [arXiv:2405.04324]."""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b",
+        family="dense",
+        num_layers=88,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=1,                   # multi-query attention
+        d_ff=24576,
+        vocab_size=49152,
+        max_seq_len=524288,
+        source="arXiv:2405.04324",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b-reduced",
+        family="dense",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=1,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=512,
+        remat="none",
+        source="arXiv:2405.04324",
+    )

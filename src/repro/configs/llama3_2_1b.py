@@ -1,0 +1,36 @@
+"""llama3.2-1b [dense] — small llama3 [hf:meta-llama/Llama-3.2-1B]."""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b",
+        family="dense",
+        num_layers=16,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=128256,
+        max_seq_len=524288,
+        rope_theta=500_000.0,
+        tie_embeddings=True,
+        source="hf:meta-llama/Llama-3.2-1B",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b-reduced",
+        family="dense",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=512,
+        tie_embeddings=True,
+        remat="none",
+        source="hf:meta-llama/Llama-3.2-1B",
+    )

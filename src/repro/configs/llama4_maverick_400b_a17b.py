@@ -1,0 +1,43 @@
+"""llama4-maverick-400b-a17b [moe] — 128 experts top-1 + shared expert,
+early fusion [hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+bf16 params + bf16 optimizer moments: 400B × 16 B/param of fp32 state would
+not fit a 256-chip v5e pod (DESIGN.md §6)."""
+from repro.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        max_seq_len=524288,
+        rope_theta=500_000.0,
+        moe=MoEConfig(num_experts=128, experts_per_token=1, aux_loss_weight=0.01,
+                      shared_expert=True, capacity_factor=1.25),
+        param_dtype="bfloat16",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b-reduced",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=64,
+        vocab_size=512,
+        max_seq_len=512,
+        moe=MoEConfig(num_experts=4, experts_per_token=1, shared_expert=True,
+                      capacity_factor=1.25),
+        remat="none",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )

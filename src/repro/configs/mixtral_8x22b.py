@@ -1,0 +1,40 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention
+[arXiv:2401.04088]."""
+from repro.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b",
+        family="moe",
+        num_layers=56,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=32768,
+        max_seq_len=524288,
+        window=4096,                      # SWA — makes long_500k legal
+        rope_theta=1_000_000.0,
+        moe=MoEConfig(num_experts=8, experts_per_token=2, aux_loss_weight=0.01,
+                      capacity_factor=1.25),
+        source="arXiv:2401.04088",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-reduced",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=512,
+        window=64,
+        moe=MoEConfig(num_experts=4, experts_per_token=2, capacity_factor=1.25),
+        remat="none",
+        source="arXiv:2401.04088",
+    )

@@ -1,0 +1,38 @@
+"""moonshot-v1-16b-a3b [dense/moe] — kimi/moonlight 16B-A3B: 64 experts
+top-6 + shared expert [hf:moonshotai/Moonlight-16B-A3B]."""
+from repro.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        num_layers=48,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=1408,                        # per-expert intermediate
+        vocab_size=163840,
+        max_seq_len=524288,
+        moe=MoEConfig(num_experts=64, experts_per_token=6, aux_loss_weight=0.01,
+                      shared_expert=True, capacity_factor=1.25),
+        source="hf:moonshotai/Moonlight-16B-A3B",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b-reduced",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=64,
+        vocab_size=512,
+        max_seq_len=512,
+        moe=MoEConfig(num_experts=4, experts_per_token=2, shared_expert=True,
+                      capacity_factor=1.25),
+        remat="none",
+        source="hf:moonshotai/Moonlight-16B-A3B",
+    )

@@ -1,0 +1,37 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens, 4 codebooks
+with delay pattern [arXiv:2306.05284]. EnCodec itself is a stub per the brief;
+``input_specs`` provides frame embeddings."""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        max_seq_len=524288,
+        audio_codebooks=4,
+        source="arXiv:2306.05284",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-reduced",
+        family="audio",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=256,
+        max_seq_len=512,
+        audio_codebooks=4,
+        remat="none",
+        source="arXiv:2306.05284",
+    )

@@ -1,0 +1,19 @@
+"""The paper's own evaluation model #2 (§4.1): the Tramèr–Boneh CNN [47] on
+ScatterNet features (Fig. 4 uses it on CIFAR-10)."""
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.configs.paper_linear import DATASET_SHAPES, NUM_CLASSES
+
+
+def config(dataset: str = "cifar10") -> dict:
+    H, W, C = DATASET_SHAPES[dataset]
+    return {
+        "model": "cnn",
+        # CNN consumes the (C*81, H/4, W/4) scattering stack as an image
+        "cnn_shape": (C * 81, H // 4, W // 4),
+        "num_classes": NUM_CLASSES[dataset],
+        "run": RunConfig(
+            dp=DPConfig(epsilon=15.0, rounds=100, clip_norm=1.0),
+            p4=P4Config(group_size=8, sample_peers=35),
+            train=TrainConfig(optimizer="sgd", learning_rate=0.3),
+        ),
+    }

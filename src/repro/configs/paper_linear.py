@@ -1,0 +1,24 @@
+"""The paper's own evaluation model #1 (§4.1): one linear layer + softmax on
+ScatterNet features. Not an LM — consumed by repro.core.P4Trainer and the
+benchmark suite rather than the decoder stack."""
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core.scattering import scatter_feature_dim
+
+DATASET_SHAPES = {"femnist": (28, 28, 1), "cifar10": (32, 32, 3),
+                  "cifar100": (32, 32, 3)}
+NUM_CLASSES = {"femnist": 47, "cifar10": 10, "cifar100": 100}
+
+
+def config(dataset: str = "cifar10") -> dict:
+    return {
+        "model": "linear",
+        "feat_dim": scatter_feature_dim(DATASET_SHAPES[dataset]),
+        "num_classes": NUM_CLASSES[dataset],
+        "run": RunConfig(
+            dp=DPConfig(epsilon=15.0, rounds=100, clip_norm=1.0),
+            # paper §4.3: |g| = 4 for CIFAR-100, 8 otherwise; H = 35 peers
+            p4=P4Config(group_size=4 if dataset == "cifar100" else 8,
+                        sample_peers=35),
+            train=TrainConfig(optimizer="sgd", learning_rate=0.5),
+        ),
+    }

@@ -1,0 +1,42 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+Vision frontend (ViT + merger) is a stub per the brief; the config describes
+the 72B language decoder that consumes patch embeddings.
+"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152064,
+        max_seq_len=524288,
+        rope_theta=1_000_000.0,
+        mrope_sections=(16, 24, 24),      # t/h/w split of head_dim/2 = 64
+        vision_tokens=1024,               # stubbed ViT patch embeddings
+        source="arXiv:2409.12191",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b-reduced",
+        family="vlm",
+        num_layers=2,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=512,
+        mrope_sections=(2, 3, 3),         # head_dim/2 = 8
+        vision_tokens=16,
+        remat="none",
+        source="arXiv:2409.12191",
+    )

@@ -1,0 +1,41 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+Pattern: units of (5 mLSTM + 1 sLSTM), 2 units = 12 layers — the paper's
+mostly-mLSTM [7:1]-style mix in a scan-friendly layout.
+"""
+from repro.config import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        num_layers=12,
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,                           # xLSTM blocks carry their own 4x FFN
+        vocab_size=50304,
+        max_seq_len=524288,
+        xlstm_pattern=("m", "m", "m", "m", "m", "s"),
+        ssm=SSMConfig(state_dim=192, num_heads=4, head_dim=192, chunk_size=256),
+        source="arXiv:2405.04517",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m-reduced",
+        family="ssm",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=512,
+        max_seq_len=512,
+        xlstm_pattern=("m", "s"),
+        ssm=SSMConfig(state_dim=32, num_heads=4, head_dim=32, chunk_size=32),
+        remat="none",
+        source="arXiv:2405.04517",
+    )

@@ -1,0 +1,46 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+Layout adaptation (DESIGN.md): 81 Mamba2 layers grouped into 27 units of 3,
+ONE shared attention block (shared weights, per-unit KV cache) applied at the
+start of every unit — zamba2's "shared transformer block re-applied along the
+depth", in a scan-friendly homogeneous layout.
+"""
+from repro.config import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        num_layers=81,                    # mamba2 layers
+        hybrid_attn_every=3,              # => 27 units × (shared attn + 3 mamba)
+        d_model=3584,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=14336,
+        vocab_size=32000,
+        max_seq_len=524288,
+        ssm=SSMConfig(state_dim=64, num_heads=112, head_dim=64, expand=2,
+                      conv_width=4, chunk_size=128),
+        source="arXiv:2411.15242",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-reduced",
+        family="hybrid",
+        num_layers=2,
+        hybrid_attn_every=1,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=512,
+        ssm=SSMConfig(state_dim=16, num_heads=4, head_dim=64, expand=2,
+                      conv_width=4, chunk_size=32),
+        remat="none",
+        source="arXiv:2411.15242",
+    )

@@ -1,0 +1,9 @@
+"""The paper's contribution: P4 = private decentralized grouping (Phase 1)
++ DP proxy/private knowledge-distillation co-training (Phase 2)."""
+from repro.core.scattering import scatternet_features, scatter_feature_dim
+from repro.core.dp import (clip_by_global_norm, noble_sigma, add_noise,
+                           dp_gradients, rdp_epsilon, calibrate_sigma)
+from repro.core.distill import proxy_loss, private_loss
+from repro.core.grouping import (pairwise_l1, greedy_group_formation,
+                                 random_groups, group_matrix)
+from repro.core.p4 import P4Trainer, make_p4_lm_step

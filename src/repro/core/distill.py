@@ -1,0 +1,36 @@
+"""Deep-mutual-learning losses between proxy and private models
+(paper Eqs. 6–9; Zhang et al. 2018 [60]).
+
+The proxy model f_w is the ONLY thing shared with the group (trained with DP);
+the private model f_θ never leaves the client and never sees DP noise — the
+paper's central decoupling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import kl_divergence, softmax_cross_entropy
+
+
+def _ce(logits, labels):
+    return softmax_cross_entropy(logits, labels)
+
+
+def proxy_loss(proxy_logits, private_logits, labels, alpha: float,
+               temperature: float = 1.0):
+    """Eq. 8: L_w = (1−α)·CE(f_w, y) + α·KL(f_w ‖ f_θ). The private logits are
+    the *target* (stop-gradient), per deep mutual learning."""
+    ce = _ce(proxy_logits, labels)
+    kl = kl_divergence(proxy_logits, jax.lax.stop_gradient(private_logits),
+                       temperature)
+    return (1.0 - alpha) * ce + alpha * kl
+
+
+def private_loss(private_logits, proxy_logits, labels, beta: float,
+                 temperature: float = 1.0):
+    """Eq. 9: L_θ = (1−β)·CE(f_θ, y) + β·KL(f_θ ‖ f_w)."""
+    ce = _ce(private_logits, labels)
+    kl = kl_divergence(private_logits, jax.lax.stop_gradient(proxy_logits),
+                       temperature)
+    return (1.0 - beta) * ce + beta * kl

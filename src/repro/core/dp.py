@@ -1,0 +1,180 @@
+"""Differential privacy machinery (paper §3.3 Phase 2, Eqs. 10–12).
+
+* ``clip_by_global_norm`` / ``add_noise`` — Eqs. 10–11.
+* ``noble_sigma`` — Eq. 12 (Noble et al. 2022 bound, with l = M' = 1 in the
+  P2P setting, as the paper sets them).
+* ``rdp_epsilon`` / ``calibrate_sigma`` — Rényi-DP accountant for the
+  subsampled Gaussian mechanism (Mironov 2017), used by the FedAvg/Scaffold
+  baselines exactly as the paper describes (§4.2.1).
+* ``dp_gradients`` — per-example (vmap) or microbatch (lax.scan) clipped +
+  noised gradients. Per-example is the paper-faithful path; microbatch is the
+  LM-scale realization (DESIGN.md §2). The flat clip-scale-accumulate hot
+  loop has a Pallas kernel (repro.kernels.dp_clip) selected by use_pallas.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import global_norm
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 — clipping
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(tree, clip: float):
+    """g ← g · min(1, C/‖g‖₂) (paper Eq. 10)."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Eq. 11 — noise
+# ---------------------------------------------------------------------------
+
+def add_noise(tree, key, sigma: float, clip: float, denom: float):
+    """H̃ = mean(g̃) + (2C/denom)·N(0, σ²)  (paper Eq. 11, denom = s·R)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        g + (2.0 * clip / denom) * sigma * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+        for g, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12 — Noble et al. σ bound (P2P: l = M' = 1)
+# ---------------------------------------------------------------------------
+
+def noble_sigma(epsilon: float, delta: float, *, sample_rate: float = 1.0,
+                rounds: int = 100, local_steps: int = 1, client_ratio: float = 1.0,
+                num_aggregated: int = 1) -> float:
+    """σ_g = s·sqrt(l·T·K·log(2Tl/δ)·log(2/δ)) / (ε·sqrt(M'))  (Eq. 12)."""
+    s, T, K, l, M = sample_rate, rounds, local_steps, client_ratio, num_aggregated
+    return float(s * math.sqrt(l * T * K * math.log(2 * T * l / delta)
+                               * math.log(2 / delta)) / (epsilon * math.sqrt(M)))
+
+
+# ---------------------------------------------------------------------------
+# RDP accountant (subsampled Gaussian) — for the centralized baselines
+# ---------------------------------------------------------------------------
+
+_ORDERS = tuple([1.5, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 128])
+
+
+def _rdp_gaussian(sigma: float, alpha: float) -> float:
+    return alpha / (2.0 * sigma ** 2)
+
+
+def _log_comb(n, k):
+    return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
+
+
+def _rdp_subsampled(q: float, sigma: float, alpha: int) -> float:
+    """Mironov et al. computable bound for Poisson-subsampled Gaussian,
+    integer α ≥ 2."""
+    if q == 1.0:
+        return _rdp_gaussian(sigma, alpha)
+    if q == 0.0:
+        return 0.0
+    # log of sum_{k=0}^{alpha} C(alpha,k) (1-q)^{alpha-k} q^k exp(k(k-1)/(2σ²))
+    logs = []
+    for k in range(alpha + 1):
+        log_term = (_log_comb(alpha, k) + (alpha - k) * math.log1p(-q)
+                    + k * math.log(q) + (k * (k - 1)) / (2.0 * sigma ** 2))
+        logs.append(log_term)
+    m = max(logs)
+    total = m + math.log(sum(math.exp(l - m) for l in logs))
+    return total / (alpha - 1)
+
+
+def rdp_epsilon(sigma: float, q: float, steps: int, delta: float) -> float:
+    """(ε, δ)-DP of ``steps`` compositions of the subsampled Gaussian."""
+    best = float("inf")
+    for alpha in _ORDERS:
+        if alpha == int(alpha) and alpha >= 2:
+            rdp = steps * _rdp_subsampled(q, sigma, int(alpha))
+        else:
+            if q < 1.0:
+                continue
+            rdp = steps * _rdp_gaussian(sigma, alpha)
+        eps = rdp + math.log1p(-1.0 / alpha) - math.log(delta * alpha) / (alpha - 1)
+        best = min(best, eps)
+    return best
+
+
+def calibrate_sigma(target_eps: float, delta: float, q: float, steps: int,
+                    lo: float = 0.2, hi: float = 200.0) -> float:
+    """Binary-search the smallest σ meeting (ε, δ) after ``steps`` rounds."""
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if rdp_epsilon(mid, q, steps, delta) > target_eps:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# DP gradients — per-example (paper-faithful) and microbatch (LM-scale)
+# ---------------------------------------------------------------------------
+
+def dp_gradients(loss_fn: Callable, params, batch, key, *, clip: float,
+                 sigma: float, microbatches: int = 0, use_pallas: bool = False):
+    """Clipped + noised gradient of ``loss_fn(params, batch) -> scalar``.
+
+    microbatches == 0 — exact per-example DP-SGD: vmap the gradient over the
+    leading batch axis, clip each example's gradient (Eq. 10), average, noise
+    (Eq. 11).
+
+    microbatches == k — LM-scale approximation: split the batch into k
+    microbatches (lax.scan), clip each microbatch-mean gradient, average,
+    noise. Exact per-example grads on a 72B model are memory-infeasible; this
+    is the standard large-scale DP realization (DESIGN.md §2).
+    """
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+    if microbatches == 0:
+        def one(p, ex):
+            ex = jax.tree_util.tree_map(lambda t: t[None], ex)
+            return jax.grad(loss_fn)(p, ex)
+        per_ex = jax.vmap(one, in_axes=(None, 0))(params, batch)
+        if use_pallas:
+            from repro.kernels.dp_clip import ops as dp_ops
+            summed = dp_ops.clip_accumulate_tree(per_ex, clip)
+            clipped_mean = jax.tree_util.tree_map(lambda s: s / n, summed)
+        else:
+            norms = jax.vmap(global_norm)(per_ex)                # (n,)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+            def scale_mean(g):
+                return jnp.mean(g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), axis=0)
+            clipped_mean = jax.tree_util.tree_map(scale_mean, per_ex)
+        denom = float(n)
+    else:
+        k = microbatches
+        assert n % k == 0, (n, k)
+        from repro.sharding.rules import shard_act
+        mb = jax.tree_util.tree_map(
+            lambda t: shard_act(t.reshape((k, n // k) + t.shape[1:]),
+                                (None, "batch") + (None,) * (t.ndim - 1)),
+            batch)
+
+        def body(acc, mbatch):
+            g = jax.grad(loss_fn)(params, mbatch)
+            g, _ = clip_by_global_norm(g, clip)
+            return jax.tree_util.tree_map(lambda a, b: a + b, acc, g), None
+
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        summed, _ = jax.lax.scan(body, zeros, mb)
+        clipped_mean = jax.tree_util.tree_map(lambda s: s / k, summed)
+        denom = float(k)
+
+    return add_noise(clipped_mean, key, sigma, clip, denom)

@@ -1,0 +1,137 @@
+"""Phase 1 — decentralized group formation (paper §3.3, Eqs. 3–5).
+
+Dissimilarity metric: ℓ1 norm between flattened model weights after the
+first (DP) local step — sharing those weights costs no extra privacy budget
+because they are already DP-protected (paper's argument).
+
+The greedy decentralized procedure (verbatim from the paper):
+  1. every client samples H random peers and measures ℓ1 dissimilarity;
+  2. mutually-most-similar pairs form 2-member groups; unpaired clients join
+     their most similar *ungrouped* peer; leftovers pair randomly;
+  3. groups measure group-to-group dissimilarity (min over cross-member
+     pairs, i.e. max similarity) using only similarities their members
+     already computed, and merge greedily until |g| = T.
+
+The M×M distance computation is the Pallas ``l1_distance`` kernel's job on
+TPU; here it is also available as pure JAX (kernel-validated against it).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import tree_flatten_concat
+
+
+def flatten_clients(stacked_params) -> jnp.ndarray:
+    """Stacked client params (M, ...) pytree -> (M, D) weight matrix."""
+    return jax.vmap(tree_flatten_concat)(stacked_params)
+
+
+def pairwise_l1(weights: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    """weights: (M, D) -> (M, M) ℓ1 distances (Eq. 3)."""
+    if use_pallas:
+        from repro.kernels.l1_distance import ops as l1_ops
+        return l1_ops.pairwise_l1(weights)
+    # blocked to avoid (M, M, D) materialization
+    def row(w):
+        return jnp.sum(jnp.abs(weights - w[None, :]), axis=-1)
+    return jax.lax.map(row, weights)
+
+
+def greedy_group_formation(dist: np.ndarray, group_size: int,
+                           sample_peers: int = 35, seed: int = 0) -> List[List[int]]:
+    """The paper's three-step greedy procedure. ``dist`` is the full M×M
+    matrix; sampling masks it to H peers per client (decentralized view)."""
+    rng = np.random.default_rng(seed)
+    M = dist.shape[0]
+    H = min(sample_peers, M - 1)
+
+    # -- sampled visibility mask (each client only knows H random peers) ----
+    known = np.zeros((M, M), bool)
+    for i in range(M):
+        peers = rng.choice([j for j in range(M) if j != i], H, replace=False)
+        known[i, peers] = True
+    known |= known.T                      # measurements are symmetric
+    masked = np.where(known, dist, np.inf)
+
+    # -- step 2: mutual pairs ------------------------------------------------
+    ungrouped = set(range(M))
+    groups: List[List[int]] = []
+    best = np.argmin(masked + np.where(np.eye(M, dtype=bool), np.inf, 0), axis=1)
+    for i in range(M):
+        j = int(best[i])
+        if i < j and best[j] == i and i in ungrouped and j in ungrouped:
+            groups.append([i, j])
+            ungrouped -= {i, j}
+    # unpaired clients join most-similar ungrouped peer
+    for i in sorted(ungrouped):
+        if i not in ungrouped:
+            continue
+        cands = [j for j in sorted(ungrouped) if j != i]
+        if not cands:
+            break
+        j = min(cands, key=lambda j: masked[i, j])
+        if not np.isfinite(masked[i, j]):
+            j = int(rng.choice(cands))
+        groups.append([i, j])
+        ungrouped -= {i, j}
+    for i in sorted(ungrouped):          # odd leftover joins a random pair
+        groups[rng.integers(len(groups))].append(i)
+
+    # -- step 3: merge groups until size T ----------------------------------
+    def gdist(a: Sequence[int], b: Sequence[int]) -> float:
+        # paper: group similarity ≈ max member-pair similarity (min distance)
+        vals = [masked[i, j] for i in a for j in b if np.isfinite(masked[i, j])]
+        return min(vals) if vals else np.inf
+
+    while True:
+        mergeable = [g for g in groups if len(g) < group_size]
+        merged = False
+        for g in list(mergeable):
+            if g not in groups:
+                continue
+            partners = [h for h in groups
+                        if h is not g and len(h) + len(g) <= group_size]
+            if not partners:
+                continue
+            finite = [h for h in partners if np.isfinite(gdist(g, h))]
+            h = (min(finite, key=lambda h: gdist(g, h)) if finite
+                 else partners[rng.integers(len(partners))])
+            groups.remove(g)
+            groups.remove(h)
+            groups.append(sorted(g + h))
+            merged = True
+        if not merged:
+            break
+    return [sorted(g) for g in groups]
+
+
+def random_groups(M: int, group_size: int, seed: int = 0) -> List[List[int]]:
+    """Ablation baseline (paper §4.4 i)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(M)
+    return [sorted(perm[i : i + group_size].tolist())
+            for i in range(0, M, group_size)]
+
+
+def group_matrix(groups: List[List[int]], M: int) -> np.ndarray:
+    """Binary symmetric collaboration matrix G (paper Eq. 4)."""
+    G = np.zeros((M, M), np.int32)
+    for g in groups:
+        for i in g:
+            for j in g:
+                if i != j:
+                    G[i, j] = 1
+    return G
+
+
+def group_ids(groups: List[List[int]], M: int) -> np.ndarray:
+    ids = np.zeros((M,), np.int32)
+    for gi, g in enumerate(groups):
+        for i in g:
+            ids[i] = gi
+    return ids

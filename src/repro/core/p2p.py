@@ -1,0 +1,77 @@
+"""Simulated P2P transport — reproduces the paper's §4.5 overhead metrics.
+
+The paper measures run time / memory / communication bandwidth on two
+Raspberry Pis over websockets with pickle serialization. Here the transport
+is an in-process message bus with the same serialization, so message *sizes*
+are faithful and phase run times are measurable on this host (power draw is
+hardware-gated → N/A; see DESIGN.md gate table).
+
+Also implements the rotating-aggregator schedule of Phase 2 (Figure 1): every
+``aggregator_rotation`` rounds the aggregating member advances round-robin so
+communication load is spread across the group.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Message:
+    src: int
+    dst: int
+    kind: str
+    nbytes: int
+
+
+@dataclass
+class P2PNetwork:
+    num_clients: int
+    log: List[Message] = field(default_factory=list)
+
+    def send(self, src: int, dst: int, payload: Any, kind: str) -> int:
+        """Serialize exactly as the paper (pickle of numpy weights)."""
+        host = jax.tree_util.tree_map(np.asarray, payload)
+        nbytes = len(pickle.dumps(host, protocol=4))
+        self.log.append(Message(src, dst, kind, nbytes))
+        return nbytes
+
+    def total_bytes(self, kind: str | None = None) -> int:
+        return sum(m.nbytes for m in self.log if kind is None or m.kind == kind)
+
+    def num_messages(self, kind: str | None = None) -> int:
+        return sum(1 for m in self.log if kind is None or m.kind == kind)
+
+
+def aggregator_for_round(group: List[int], rnd: int, rotation: int = 1) -> int:
+    """Rotating aggregator (paper §3.3: 'one client can volunteer ... which
+    can change during training to distribute communication overhead')."""
+    return group[(rnd // max(rotation, 1)) % len(group)]
+
+
+def simulate_group_round(net: P2PNetwork, group: List[int], proxy_params,
+                         rnd: int, rotation: int = 1) -> Dict[str, float]:
+    """Phase-2 communication pattern for one group and one round: members
+    send proxy updates to the aggregator; aggregator broadcasts the mean."""
+    agg = aggregator_for_round(group, rnd, rotation)
+    for i in group:
+        if i != agg:
+            net.send(i, agg, proxy_params, "proxy_update")
+    for i in group:
+        if i != agg:
+            net.send(agg, i, proxy_params, "aggregated_model")
+    return {"aggregator": agg, "messages": 2 * (len(group) - 1)}
+
+
+def simulate_phase1(net: P2PNetwork, client_weights, sample_pairs) -> float:
+    """Phase-1 communication: each sampled pair exchanges model weights once
+    (initiator sends; paper §4.5 measures the 622.82 kB weight message)."""
+    t0 = time.perf_counter()
+    for (i, j) in sample_pairs:
+        net.send(i, j, client_weights, "phase1_weights")
+    return time.perf_counter() - t0

@@ -1,0 +1,320 @@
+"""P4 — the paper's full algorithm (Phases 1+2), plus its LM-scale form.
+
+Small-scale (paper-faithful): ``P4Trainer`` simulates M clients as stacked
+(M, ...) parameter pytrees; local steps are vmapped across clients, group
+aggregation is a segment-mean over proxy parameters, grouping is the greedy
+decentralized procedure on first-step weights.
+
+LM-scale (framework feature): ``make_p4_lm_step`` builds one jitted step over
+G client *groups* (G = the ``pod`` mesh axis in multi-pod runs — DESIGN.md §4):
+parameters carry a leading G dim sharded over ``pod``; vmap over G makes every
+gradient reduction group-internal by construction, exactly the paper's
+"communicate only within your group" topology.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core import distill, dp as dp_lib
+from repro.core.grouping import (flatten_clients, greedy_group_formation,
+                                 group_ids, pairwise_l1, random_groups)
+from repro.core.small_models import accuracy, linear_apply, linear_specs, make_cnn
+from repro.models.module import init_params
+from repro.utils.pytree import tree_scale
+
+
+def group_mean(stacked_tree, ids: jnp.ndarray, num_groups: int):
+    """Per-group mean of a stacked (M, ...) pytree, broadcast back to (M, ...)."""
+    M = ids.shape[0]
+    counts = jax.ops.segment_sum(jnp.ones((M,), jnp.float32), ids, num_groups)
+
+    def f(x):
+        sums = jax.ops.segment_sum(x, ids, num_groups)
+        mean = sums / counts.reshape((-1,) + (1,) * (x.ndim - 1))
+        return mean[ids].astype(x.dtype)
+
+    return jax.tree_util.tree_map(f, stacked_tree)
+
+
+@dataclass(eq=False)  # hashable by identity (methods are jitted with static self)
+class P4Trainer:
+    feat_dim: int
+    num_classes: int
+    cfg: RunConfig
+    model: str = "linear"                 # linear | cnn
+    cnn_shape: Optional[Tuple[int, int, int]] = None  # (C, H, W) for model=cnn
+
+    def __post_init__(self):
+        if self.model == "linear":
+            self.specs = linear_specs(self.feat_dim, self.num_classes)
+            self.apply_fn = linear_apply
+        else:
+            self.specs, self.apply_fn = make_cnn(self.cnn_shape, self.num_classes)
+        dpc = self.cfg.dp
+        if dpc.noise_multiplier > 0:
+            self.sigma = dpc.noise_multiplier
+        elif dpc.enabled:
+            delta = dpc.delta or 1e-3
+            self.sigma = dp_lib.noble_sigma(
+                dpc.epsilon, delta, sample_rate=dpc.sample_rate,
+                rounds=dpc.rounds, local_steps=dpc.local_steps)
+        else:
+            self.sigma = 0.0
+
+    # ------------------------------------------------------------------
+    def init_clients(self, key, M: int):
+        """COMMON initialization across clients (standard FL): Phase 1's ℓ1
+        metric then measures data-driven weight divergence, not random-init
+        distance — with per-client inits the metric is pure noise."""
+        k1, k2 = jax.random.split(key)
+        def bcast(k):
+            p = init_params(self.specs, k)
+            return jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(t[None], (M,) + t.shape), p)
+        return {"private": bcast(k1), "proxy": bcast(k2)}
+
+    # ------------------------------------------------------------------
+    def _client_step(self, private, proxy, x, y, key, lr):
+        """One local step for ONE client (vmapped across M)."""
+        p4c, dpc = self.cfg.p4, self.cfg.dp
+
+        private_logits = self.apply_fn(private, x)
+        proxy_logits = self.apply_fn(proxy, x)
+
+        # private model: clean gradient of Eq. 9
+        def private_obj(theta):
+            lg = self.apply_fn(theta, x)
+            return distill.private_loss(lg, proxy_logits, y, p4c.beta,
+                                        p4c.distill_temperature)
+        g_priv = jax.grad(private_obj)(private)
+
+        # proxy model: DP gradient of Eq. 8
+        def proxy_obj(w, batch):
+            lg = self.apply_fn(w, batch["x"])
+            tgt = self.apply_fn(jax.lax.stop_gradient(private), batch["x"])
+            return distill.proxy_loss(lg, tgt, batch["y"], p4c.alpha,
+                                      p4c.distill_temperature)
+        if dpc.enabled:
+            g_prox = dp_lib.dp_gradients(
+                proxy_obj, proxy, {"x": x, "y": y}, key,
+                clip=dpc.clip_norm, sigma=self.sigma,
+                microbatches=dpc.microbatches,
+                use_pallas=self.cfg.use_pallas)
+        else:
+            g_prox = jax.grad(lambda w: proxy_obj(w, {"x": x, "y": y}))(proxy)
+
+        new_private = jax.tree_util.tree_map(lambda p, g: p - lr * g, private, g_priv)
+        new_proxy = jax.tree_util.tree_map(lambda p, g: p - lr * g, proxy, g_prox)
+        metrics = {
+            "private_loss": distill.private_loss(private_logits, proxy_logits, y,
+                                                 p4c.beta),
+            "proxy_loss": distill.proxy_loss(proxy_logits, private_logits, y,
+                                             p4c.alpha),
+        }
+        return new_private, new_proxy, metrics
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def local_round(self, states, xs, ys, key):
+        """K local steps for all clients. xs: (M, B, feat), ys: (M, B)."""
+        lr = self.cfg.train.learning_rate
+        K = self.cfg.dp.local_steps
+        M = ys.shape[0]
+
+        def one_client(private, proxy, x, y, ckey):
+            def body(carry, k):
+                pr, px = carry
+                pr, px, _ = self._client_step(pr, px, x, y,
+                                              jax.random.fold_in(ckey, k), lr)
+                return (pr, px), None
+            (pr, px), _ = jax.lax.scan(body, (private, proxy), jnp.arange(K))
+            _, _, metrics = self._client_step(pr, px, x, y,
+                                              jax.random.fold_in(ckey, K), 0.0)
+            return pr, px, metrics
+
+        keys = jax.random.split(key, M)
+        priv, prox, metrics = jax.vmap(one_client)(
+            states["private"], states["proxy"], xs, ys, keys)
+        return {"private": priv, "proxy": prox}, metrics
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def aggregate(self, states, ids, num_groups: int):
+        """Group-internal proxy aggregation (rotating aggregator in p2p.py)."""
+        return {"private": states["private"],
+                "proxy": group_mean(states["proxy"], ids, num_groups)}
+
+    # ------------------------------------------------------------------
+    def form_groups(self, states, seed: int = 0) -> List[List[int]]:
+        p4c = self.cfg.p4
+        M = jax.tree_util.tree_leaves(states["proxy"])[0].shape[0]
+        if p4c.similarity == "random":
+            return random_groups(M, p4c.group_size, seed)
+        weights = flatten_clients(states["proxy"])
+        dist = np.asarray(pairwise_l1(weights, use_pallas=self.cfg.use_pallas))
+        return greedy_group_formation(dist, p4c.group_size,
+                                      p4c.sample_peers, seed)
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def evaluate(self, states, xs, ys):
+        """Per-client test accuracy of the PERSONALIZED (private) model."""
+        def one(private, x, y):
+            return accuracy(self.apply_fn(private, x), y)
+        return jax.vmap(one)(states["private"], xs, ys)
+
+    # ------------------------------------------------------------------
+    def fit(self, train_x, train_y, test_x, test_y, *, rounds: Optional[int] = None,
+            key=None, eval_every: int = 20, batch_size: Optional[int] = None,
+            groups: Optional[List[List[int]]] = None, seed: int = 0,
+            bootstrap_rounds: int = 4):
+        """Full P4: bootstrap round(s) -> grouping -> T co-training rounds.
+
+        bootstrap_rounds > 1 trades a few pre-grouping rounds for grouping
+        SNR: DP noise on the weights grows √k while the data-driven weight
+        divergence grows k, so the ℓ1 metric's signal-to-noise improves √k
+        (EXPERIMENTS.md §Paper-validation discusses the feasibility envelope
+        n·√k the paper's own setup implicitly satisfies with R=200–300)."""
+        rounds = rounds or self.cfg.dp.rounds
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.train.seed)
+        M, R = train_y.shape
+        bs = batch_size or max(8, int(self.cfg.dp.sample_rate * R))
+        rng = np.random.default_rng(seed)
+
+        states = self.init_clients(key, M)
+
+        def sample_batches(r):
+            idx = rng.integers(0, R, size=(M, bs))
+            gx = np.take_along_axis(train_x, idx[..., None], axis=1)
+            gy = np.take_along_axis(train_y, idx, axis=1)
+            return jnp.asarray(gx), jnp.asarray(gy)
+
+        # bootstrap local steps on the FULL local dataset (paper §3.3: weights
+        # after first local training; Eq. 11's noise scales with 1/n, so the
+        # full batch + k rounds maximize the grouping signal-to-noise)
+        for br in range(max(1, bootstrap_rounds)):
+            states, _ = self.local_round(states, jnp.asarray(train_x),
+                                         jnp.asarray(train_y),
+                                         jax.random.fold_in(key, br))
+        if groups is None:
+            groups = self.form_groups(states, seed)
+        ids = jnp.asarray(group_ids(groups, M))
+        G = len(groups)
+
+        history = []
+        for r in range(max(1, bootstrap_rounds), rounds):
+            xs, ys = sample_batches(r)
+            states, metrics = self.local_round(states, xs, ys, jax.random.fold_in(key, r))
+            states = self.aggregate(states, ids, G)
+            if r % eval_every == 0 or r == rounds - 1:
+                acc = self.evaluate(states, test_x, test_y)
+                history.append((r, float(jnp.mean(acc))))
+        return states, groups, history
+
+
+# ---------------------------------------------------------------------------
+# LM-scale P4 step (dry-run / production form)
+# ---------------------------------------------------------------------------
+
+def make_p4_lm_step(api_private, api_proxy, train_cfg: TrainConfig,
+                    dp_cfg: DPConfig, p4_cfg: P4Config):
+    """One jitted co-training step over G client groups (leading dim).
+
+    params = {"private": (G, ...), "proxy": (G, ...)}; batch tokens (G, b, s).
+    The G axis is sharded over "pod"; vmap over G keeps every reduction
+    group-internal. Proxy gradients are microbatch-clipped + noised (the
+    LM-scale DP realization); private gradients are clean.
+    """
+    from repro.models import transformer
+    from repro.models.layers import kl_divergence, softmax_cross_entropy
+    from repro.optim import make_optimizer
+
+    cfg_t, cfg_w = api_private.cfg, api_proxy.cfg
+    opt = make_optimizer(train_cfg)
+    sigma = dp_cfg.noise_multiplier or dp_lib.noble_sigma(
+        dp_cfg.epsilon, dp_cfg.delta or 1e-5, sample_rate=dp_cfg.sample_rate,
+        rounds=dp_cfg.rounds, local_steps=dp_cfg.local_steps)
+
+    def _logits(params, cfg, batch):
+        lg, aux, _ = transformer.forward(params, cfg, batch)
+        return lg, aux
+
+    def per_group(theta, w, opt_t, opt_w, batch, key):
+        tokens = batch["tokens"]
+        # targets for mutual distillation (constant w.r.t. the other model)
+        theta_logits = jax.lax.stop_gradient(_logits(theta, cfg_t, batch)[0])
+        w_logits = jax.lax.stop_gradient(_logits(w, cfg_w, batch)[0])
+
+        def private_obj(p, b):
+            lg, aux = _logits(p, cfg_t, b)
+            ce = softmax_cross_entropy(lg[:, :-1], b["tokens"][:, 1:])
+            kl = kl_divergence(lg, b["w_logits"])
+            return (1 - p4_cfg.beta) * ce + p4_cfg.beta * kl + aux
+
+        def proxy_obj(p, b):
+            lg, aux = _logits(p, cfg_w, b)
+            ce = softmax_cross_entropy(lg[:, :-1], b["tokens"][:, 1:])
+            kl = kl_divergence(lg, b["theta_logits"])
+            return (1 - p4_cfg.alpha) * ce + p4_cfg.alpha * kl + aux
+
+        bt = dict(batch, w_logits=w_logits)
+        bw = dict(batch, theta_logits=theta_logits)
+        g_theta = jax.grad(private_obj)(theta, bt)
+        g_w = dp_lib.dp_gradients(proxy_obj, w, bw, key, clip=dp_cfg.clip_norm,
+                                  sigma=sigma,
+                                  microbatches=max(dp_cfg.microbatches, 1))
+        new_theta, new_opt_t = opt.update(g_theta, opt_t, theta)
+        new_w, new_opt_w = opt.update(g_w, opt_w, w)
+        loss = softmax_cross_entropy(theta_logits[:, :-1], tokens[:, 1:])
+        return new_theta, new_w, new_opt_t, new_opt_w, loss
+
+    def _vmapped(params, opt_states, batch, key):
+        G = batch["tokens"].shape[0]
+        keys = jax.random.split(key, G)
+        new_theta, new_w, opt_t, opt_w, loss = jax.vmap(per_group)(
+            params["private"], params["proxy"],
+            opt_states["private"], opt_states["proxy"], batch, keys)
+        return ({"private": new_theta, "proxy": new_w},
+                {"private": opt_t, "proxy": opt_w}, loss)
+
+    def step(params, opt_states, batch, key):
+        """Groups stacked on dim 0. If a mesh with a ``pod`` axis is active,
+        the group dim is made MANUAL via partial shard_map — group-locality
+        becomes structural (no partitioner guessing; §Perf hillclimb 3:
+        vmap-only lowering leaked ~13 GB/step of embedding-gather traffic
+        across pods, shard_map removes it by construction)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.rules import _CTX
+        ctx = getattr(_CTX, "val", None)
+        mesh = ctx[0] if ctx else None
+        # NOTE: partial-manual shard_map over "pod" is the structurally right
+        # tool but crashes this XLA version's SPMD partitioner (fatal check in
+        # spmd_partitioner_util.cc) when nested auto axes remain — kept behind
+        # a flag; the shipping fix is untied embeddings + unsharded gather
+        # table (§Perf hillclimb 3, iter 3).
+        if (p4_cfg.manual_pod and mesh is not None
+                and "pod" in getattr(mesh, "axis_names", ())):
+            pspec = lambda tree: jax.tree_util.tree_map(lambda _: P("pod"), tree)
+
+            def body(p, o, b, k):
+                new_p, new_o, loss = _vmapped(p, o, b, k)
+                return new_p, new_o, jax.lax.pmean(jnp.mean(loss), "pod")
+
+            new_params, new_opt, loss = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(pspec(params), pspec(opt_states), pspec(batch), P()),
+                out_specs=(pspec(params), pspec(opt_states), P()),
+                axis_names={"pod"}, check_vma=False,
+            )(params, opt_states, batch, key)
+            return new_params, new_opt, {"loss": loss}
+        new_params, new_opt, loss = _vmapped(params, opt_states, batch, key)
+        return new_params, new_opt, {"loss": jnp.mean(loss)}
+
+    return step

@@ -1,0 +1,129 @@
+"""ScatterNet handcrafted features (paper §4.2; Oyallon & Mallat 2015).
+
+Depth-2 scattering with Morlet wavelets over 8 orientations and J=2 scales:
+
+  S0 = φ * x                         (1 channel)
+  S1 = φ * |ψ_{j,θ} * x|             (J·A = 16 channels)
+  S2 = φ * |ψ_{1,θ2} * |ψ_{0,θ1}*x|| (A·A = 64 channels, j2 > j1)
+
+→ 81 channels per input channel (matches the paper: 81 grayscale / 243 RGB),
+spatially downsampled 2^J = 4× → (K, H/4, W/4).
+
+TPU adaptation (DESIGN.md §2): direct convolution with precomputed real/imag
+Morlet filterbanks via lax.conv_general_dilated (MXU conv units) instead of
+kymatio's FFT path — at 28/32 px, direct conv is faster on TPU and avoids
+complex-FFT lowering. The filterbank is cached per image geometry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ANGLES = 8
+J = 2
+
+
+def _morlet(size: int, scale: float, theta: float, xi: float = 3 * np.pi / 4):
+    """Real/imag Morlet wavelet on a size×size grid at given scale/orientation."""
+    half = size // 2
+    y, x = np.mgrid[-half : half + 1, -half : half + 1].astype(np.float64)[:, :size, :size]
+    rx = x * np.cos(theta) + y * np.sin(theta)
+    ry = -x * np.sin(theta) + y * np.cos(theta)
+    sigma = 0.8 * scale
+    env = np.exp(-(rx ** 2 + ry ** 2 / (0.5 ** 2)) / (2 * sigma ** 2))
+    wave = np.exp(1j * (xi / scale) * rx)
+    psi = env * wave
+    psi -= env * (env * wave).sum() / max(env.sum(), 1e-12)   # zero-mean correction
+    psi /= max(np.abs(psi).sum(), 1e-12)
+    return psi.real.astype(np.float32), psi.imag.astype(np.float32)
+
+
+def _gaussian(size: int, scale: float):
+    half = size // 2
+    y, x = np.mgrid[-half : half + 1, -half : half + 1].astype(np.float64)[:, :size, :size]
+    sigma = 0.8 * scale
+    g = np.exp(-(x ** 2 + y ** 2) / (2 * sigma ** 2))
+    return (g / g.sum()).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=8)
+def _filterbank(size: int = 13):
+    """Returns (psi_re, psi_im) each (J*A, size, size) and phi (size, size)."""
+    re, im = [], []
+    for j in range(J):
+        for a in range(ANGLES):
+            theta = np.pi * a / ANGLES
+            r, i = _morlet(size, 2.0 ** j, theta)
+            re.append(r)
+            im.append(i)
+    phi = _gaussian(size, 2.0 ** J)
+    return np.stack(re), np.stack(im), phi
+
+
+def _conv_same(x, filt):
+    """x: (B, C, H, W); filt: (K, h, w) applied per input channel.
+    Returns (B, C*K, H, W)."""
+    B, C, H, W = x.shape
+    K = filt.shape[0]
+    kern = jnp.asarray(filt)[:, None, :, :]                    # (K, 1, h, w)
+    kern = jnp.tile(kern, (C, 1, 1, 1))                        # (C*K, 1, h, w)
+    return jax.lax.conv_general_dilated(
+        x, kern, window_strides=(1, 1), padding="SAME",
+        feature_group_count=C,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _lowpass_down(x, phi, stride: int):
+    B, C, H, W = x.shape
+    kern = jnp.asarray(phi)[None, None, :, :]
+    kern = jnp.tile(kern, (C, 1, 1, 1))
+    return jax.lax.conv_general_dilated(
+        x, kern, window_strides=(stride, stride), padding="SAME",
+        feature_group_count=C,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def scatter_feature_dim(image_shape: Tuple[int, int, int]) -> int:
+    H, W, C = image_shape
+    K = 1 + J * ANGLES + ANGLES * ANGLES * (J * (J - 1) // 2)  # 81
+    return C * K * (H // 4) * (W // 4)
+
+
+def scatternet_features(images, flatten: bool = True, normalize: bool = True):
+    """images: (B, H, W, C) -> (B, C*81, H/4, W/4) [or flattened].
+
+    Channel-wise normalization uses per-batch statistics — the paper computes
+    these locally per client (no privacy cost, §4.2).
+    """
+    x = jnp.transpose(images, (0, 3, 1, 2)).astype(jnp.float32)  # (B,C,H,W)
+    B, C, H, W = x.shape
+    psi_re, psi_im, phi = _filterbank()
+    A = ANGLES
+
+    # order 1: modulus of wavelet responses, all J*A bands
+    re = _conv_same(x, psi_re)                                  # (B, C*JA, H, W)
+    im = _conv_same(x, psi_im)
+    u1 = jnp.sqrt(re ** 2 + im ** 2 + 1e-12)                    # (B, C*JA, H, W)
+
+    s0 = _lowpass_down(x, phi, 4)                               # (B, C, H/4, W/4)
+    s1 = _lowpass_down(u1, phi, 4)                              # (B, C*JA, ...)
+
+    # order 2: scale-0 bands re-filtered by scale-1 wavelets
+    u1_j0 = u1.reshape(B, C, J * A, H, W)[:, :, :A].reshape(B, C * A, H, W)
+    re2 = _conv_same(u1_j0, psi_re[A:])                         # scale-1 filters
+    im2 = _conv_same(u1_j0, psi_im[A:])
+    u2 = jnp.sqrt(re2 ** 2 + im2 ** 2 + 1e-12)                  # (B, C*A*A, H, W)
+    s2 = _lowpass_down(u2, phi, 4)
+
+    feats = jnp.concatenate([s0, s1, s2], axis=1)               # (B, C*81, H/4, W/4)
+    if normalize:
+        mu = jnp.mean(feats, axis=(0, 2, 3), keepdims=True)
+        sd = jnp.std(feats, axis=(0, 2, 3), keepdims=True)
+        feats = (feats - mu) / (sd + 1e-5)
+    if flatten:
+        feats = feats.reshape(B, -1)
+    return feats

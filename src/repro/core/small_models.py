@@ -1,0 +1,67 @@
+"""The paper's evaluation models (§4.1): a linear classifier (one layer +
+softmax) and the Tramèr–Boneh CNN [47], both consuming either ScatterNet
+features or raw images."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec, init_params
+
+
+def linear_specs(feat_dim: int, num_classes: int):
+    return {
+        "w": ParamSpec((feat_dim, num_classes), ("embed", "vocab"), init="fan_in"),
+        "b": ParamSpec((num_classes,), ("vocab",), init="zeros"),
+    }
+
+
+def linear_apply(params, x):
+    """x: (B, feat) -> logits (B, classes)."""
+    return jnp.einsum("bf,fc->bc", x, params["w"].astype(jnp.float32)) + params["b"]
+
+
+def cnn_specs(in_ch: int, num_classes: int, width: int = 32):
+    """Small CNN (conv-relu-pool ×2 + linear), applied to (B, C, H, W)."""
+    return {
+        "c1": ParamSpec((width, in_ch, 3, 3), (None, None, None, None), init="fan_in"),
+        "c2": ParamSpec((2 * width, width, 3, 3), (None, None, None, None), init="fan_in"),
+        "w": ParamSpec((0, num_classes), ("embed", "vocab"), init="fan_in"),  # resolved lazily
+        "b": ParamSpec((num_classes,), ("vocab",), init="zeros"),
+    }
+
+
+def make_cnn(in_shape: Tuple[int, int, int], num_classes: int, width: int = 32):
+    """Returns (specs, apply) with the linear head sized for ``in_shape``
+    (C, H, W)."""
+    C, H, W = in_shape
+    h2, w2 = H // 4 or 1, W // 4 or 1
+    feat = 2 * width * h2 * w2
+    specs = {
+        "c1": ParamSpec((width, C, 3, 3), (None, None, None, None), init="fan_in"),
+        "c2": ParamSpec((2 * width, width, 3, 3), (None, None, None, None), init="fan_in"),
+        "w": ParamSpec((feat, num_classes), ("embed", "vocab"), init="fan_in"),
+        "b": ParamSpec((num_classes,), ("vocab",), init="zeros"),
+    }
+
+    def apply(params, x):
+        """x: (B, C, H, W) [or (B, C*H*W) flattened] -> logits."""
+        if x.ndim == 2:
+            x = x.reshape(x.shape[0], C, H, W)
+        def conv(t, k):
+            return jax.lax.conv_general_dilated(
+                t, k, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        x = jax.nn.relu(conv(x, params["c1"].astype(jnp.float32)))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        x = jax.nn.relu(conv(x, params["c2"].astype(jnp.float32)))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        return jnp.einsum("bf,fc->bc", x, params["w"].astype(jnp.float32)) + params["b"]
+
+    return specs, apply
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

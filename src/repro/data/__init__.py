@@ -1,0 +1,4 @@
+from repro.data.synthetic import make_image_task_pool, DATASET_STATS
+from repro.data.partition import shard_partition, alpha_partition
+from repro.data.pipeline import client_batches, train_test_split
+from repro.data.tokens import synth_token_batch

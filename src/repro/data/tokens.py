@@ -1,0 +1,26 @@
+"""Synthetic LM token pipeline for the assigned-architecture drivers.
+
+Generates structured token streams (order-k Markov chains over the vocab) so
+the ~100M-parameter end-to-end training example has a learnable signal and a
+measurable falling loss, not uniform noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def synth_token_batch(rng: np.random.Generator, batch: int, seq: int, vocab: int,
+                      period: int = 17):
+    """Tokens with periodic + local structure: t[i] depends on t[i-1] and a
+    global phase; next-token entropy is well below log(vocab)."""
+    base = rng.integers(0, vocab, size=(batch, 1))
+    steps = rng.integers(1, 7, size=(batch, seq))
+    phase = (np.arange(seq) % period)[None, :]
+    toks = (base + np.cumsum(steps, axis=1) + 3 * phase) % vocab
+    return toks.astype(np.int32)
+
+
+def token_stream(seed: int, batch: int, seq: int, vocab: int):
+    rng = np.random.default_rng(seed)
+    while True:
+        yield synth_token_batch(rng, batch, seq, vocab)

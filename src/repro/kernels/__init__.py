@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  dp_clip          — per-example gradient clip-scale-accumulate, the DP-SGD
+                     throughput bottleneck (paper Phase 2 inner loop)
+  l1_distance      — pairwise ℓ1 over flattened client weights (Phase 1)
+  flash_attention  — blocked online-softmax attention (prefill at 32k/500k)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). On this CPU container all kernels run in
+interpret mode; on TPU set interpret=False (RunConfig.use_pallas).
+"""

@@ -1,0 +1,84 @@
+"""Pallas kernels for DP-SGD per-example clipping (paper Eqs. 10–11 hot loop).
+
+Two passes over the (B, D) per-example flat-gradient matrix:
+
+  1. ``sq_norms``        — per-example Σ g², tiled over D (VMEM-resident
+                           (TB, TD) tiles; fp32 accumulation into (B,) out).
+  2. ``scale_accumulate``— Σ_b scale_b · g_b, tiled over (B, D); the B grid
+                           axis accumulates into the (TD,) output tile.
+
+Tiling: TD = 16k lanes (128-aligned; 8·16k·4 B ≈ 0.5 MB per tile, well under
+the ~16 MB v5e VMEM even with double buffering), TB = 8 sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TB = 8
+DEFAULT_TD = 16384
+
+
+def _sq_norm_kernel(x_ref, out_ref):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(x * x, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "td", "interpret"))
+def sq_norms(x, tb: int = DEFAULT_TB, td: int = DEFAULT_TD, interpret: bool = True):
+    """x: (B, D) -> per-example squared l2 norms (B,). B % tb == D % td == 0."""
+    B, D = x.shape
+    tb, td = min(tb, B), min(td, D)
+    assert B % tb == 0 and D % td == 0, (B, tb, D, td)
+    grid = (B // tb, D // td)
+    return pl.pallas_call(
+        _sq_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, td), lambda b, d: (b, d))],
+        out_specs=pl.BlockSpec((tb,), lambda b, d: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _scale_acc_kernel(x_ref, s_ref, out_ref):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (TB, TD)
+    s = s_ref[...].astype(jnp.float32)          # (TB,)
+    out_ref[...] += jnp.einsum("bd,b->d", x, s)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "td", "interpret"))
+def scale_accumulate(x, scales, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
+                     interpret: bool = True):
+    """x: (B, D), scales: (B,) -> Σ_b scales_b · x_b  (D,) fp32."""
+    B, D = x.shape
+    tb, td = min(tb, B), min(td, D)
+    assert B % tb == 0 and D % td == 0, (B, tb, D, td)
+    grid = (D // td, B // tb)                   # B innermost: accumulation axis
+    return pl.pallas_call(
+        _scale_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, td), lambda d, b: (b, d)),
+            pl.BlockSpec((tb,), lambda d, b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((td,), lambda d, b: (d,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(x, scales)

@@ -1,0 +1,45 @@
+"""jit'd wrappers: per-example clipped-gradient accumulation over pytrees.
+
+Pads (B, D) to tile multiples, runs the two Pallas passes, and maps the flat
+result back onto the gradient pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dp_clip import kernel
+from repro.utils.pytree import tree_flatten_concat, tree_unflatten_concat
+
+
+def _pad_to(x, mb, md):
+    B, D = x.shape
+    pb = (-B) % mb
+    pd = (-D) % md
+    if pb or pd:
+        x = jnp.pad(x, ((0, pb), (0, pd)))
+    return x
+
+
+def clip_accumulate_flat(x, clip: float, interpret: bool = True,
+                         tb: int = 8, td: int = 16384):
+    """x: (B, D) per-example flat grads -> Σ_b clipped(g_b) (D,)."""
+    B, D = x.shape
+    td = min(td, max(128, D))
+    xp = _pad_to(x, tb, td)
+    sq = kernel.sq_norms(xp, tb=tb, td=td, interpret=interpret)[:B]
+    norms = jnp.sqrt(sq)
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    scales = jnp.pad(scales, (0, xp.shape[0] - B))
+    out = kernel.scale_accumulate(xp, scales, tb=tb, td=td, interpret=interpret)
+    return out[:D]
+
+
+def clip_accumulate_tree(per_example_grads, clip: float, interpret: bool = True):
+    """per_example_grads: pytree with leading example dim (B, ...) on every
+    leaf -> pytree of Σ_b clipped(g_b) (the DP-SGD numerator of Eq. 11)."""
+    flat = jax.vmap(tree_flatten_concat)(per_example_grads)      # (B, D)
+    summed = clip_accumulate_flat(flat, clip, interpret=interpret)
+    template = jax.tree_util.tree_map(lambda g: g[0], per_example_grads)
+    return tree_unflatten_concat(summed, template)

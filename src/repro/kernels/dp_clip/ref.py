@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the dp_clip kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sq_norms(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=1)
+
+
+def scale_accumulate(x, scales):
+    return jnp.einsum("bd,b->d", x.astype(jnp.float32), scales.astype(jnp.float32))
+
+
+def clip_accumulate(x, clip: float):
+    """Full fused reference: Σ_b clip(g_b) with per-example l2 clipping."""
+    norms = jnp.sqrt(sq_norms(x))
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    return scale_accumulate(x, scales)

@@ -1,0 +1,23 @@
+"""jit'd wrapper: (b, s, h, d) GQA layout -> flash kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel
+
+
+def flash_attention_gqa(q, k, v, *, causal: bool = True, window: int = 0,
+                        interpret: bool = True, block_q: int = 128,
+                        block_k: int = 128):
+    """q: (b, s, hq, d); k, v: (b, s, hkv, d) -> (b, s, hq, d)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    o = kernel.flash_attention(to_bh(q), to_bh(kx), to_bh(vx), causal=causal,
+                               window=window, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return o.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

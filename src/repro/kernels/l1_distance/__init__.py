@@ -1,0 +1,1 @@
+from repro.kernels.l1_distance import ops, ref

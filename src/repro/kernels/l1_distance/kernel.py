@@ -1,0 +1,51 @@
+"""Pallas kernel: pairwise ℓ1 distance between client weight vectors
+(paper Eq. 3, Phase-1 grouping).
+
+Grid (Mi, Mj, Dk): each step loads (TM, TD) row/col tiles and accumulates
+|x_i − x_j| partial sums into the (TM, TM) output tile; the D axis is
+innermost so the output tile stays VMEM-resident across the reduction.
+VPU-only (abs/add) — no MXU use, which is why this beats an einsum-based
+|a−b| formulation that would materialize (M, M, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TM = 8
+DEFAULT_TD = 8192
+
+
+def _l1_kernel(xi_ref, xj_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)        # (TM, TD)
+    xj = xj_ref[...].astype(jnp.float32)        # (TM, TD)
+    out_ref[...] += jnp.sum(jnp.abs(xi[:, None, :] - xj[None, :, :]), axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "td", "interpret"))
+def pairwise_l1(x, tm: int = DEFAULT_TM, td: int = DEFAULT_TD, interpret: bool = True):
+    """x: (M, D) -> (M, M) ℓ1 distances. M % tm == D % td == 0."""
+    M, D = x.shape
+    tm, td = min(tm, M), min(td, D)
+    assert M % tm == 0 and D % td == 0, (M, tm, D, td)
+    grid = (M // tm, M // tm, D // td)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tm, td), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, M), jnp.float32),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the pairwise-ℓ1 Pallas kernel (pads to tile multiples)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.l1_distance import kernel
+
+
+def pairwise_l1(x, interpret: bool = True, tm: int = 8, td: int = 8192):
+    M, D = x.shape
+    td = min(td, max(128, D))
+    pm = (-M) % tm
+    pd = (-D) % td
+    xp = jnp.pad(x, ((0, pm), (0, pd)))
+    out = kernel.pairwise_l1(xp, tm=tm, td=td, interpret=interpret)
+    return out[:M, :M]

@@ -1,0 +1,31 @@
+"""Production mesh definitions (v5e).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256-chip pod; multi-pod = 2 pods = 512 chips.
+
+    Axes: ``pod`` (= the P4 group axis, DCN), ``data`` (batch/FSDP, ICI),
+    ``model`` (tensor parallel, ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over real host devices (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(1, min(model, n // data))), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Run the full dry-run sweep: every (arch × input-shape × mesh) as an
+isolated subprocess (a failed combo doesn't kill the sweep), appending JSONL
+results consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["qwen2-vl-72b", "zamba2-7b", "mixtral-8x22b", "qwen3-14b",
+         "moonshot-v1-16b-a3b", "granite-34b", "llama3.2-1b", "xlstm-125m",
+         "musicgen-large", "llama4-maverick-400b-a17b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_sweep.jsonl")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=ARCHS)
+    ap.add_argument("--shapes", nargs="*", default=SHAPES)
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in args.archs:
+            for shape in args.shapes:
+                if (arch, shape, mesh_name) in done:
+                    print(f"skip {arch} {shape} {mesh_name} (done)", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", args.out]
+                if mp:
+                    cmd.append("--multi-pod")
+                # multi-pod pass proves the pod axis shards; roofline table is
+                # single-pod — skip the (expensive) cost extrapolation there.
+                if args.no_cost or mp:
+                    cmd.append("--no-cost")
+                t0 = time.time()
+                print(f"=== {arch} × {shape} × {mesh_name}", flush=True)
+                try:
+                    p = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    ok = p.returncode == 0
+                    if not ok:
+                        failures.append((arch, shape, mesh_name,
+                                         p.stderr.strip().splitlines()[-1] if p.stderr else "?"))
+                        print(p.stdout[-2000:])
+                        print(p.stderr[-3000:])
+                except subprocess.TimeoutExpired:
+                    ok = False
+                    failures.append((arch, shape, mesh_name, "timeout"))
+                print(f"    -> {'OK' if ok else 'FAIL'} in {time.time()-t0:.0f}s",
+                      flush=True)
+    print(f"\nsweep complete; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""End-to-end training driver.
+
+Two modes:
+  standard — one model, AdamW, synthetic structured token stream. With
+             ``--arch llama3.2-1b --reduced`` scaled to ~100M params this is
+             the brief's "train a ~100M model for a few hundred steps" driver.
+  --p4     — the paper's technique at LM scale: G client groups, dual
+             private/proxy models, DP-noised proxy gradients, group-internal
+             aggregation (vmap over the group axis).
+
+Runs on whatever devices exist (CPU here; the production mesh path is
+exercised by launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import DPConfig, P4Config, TrainConfig, replace
+from repro.configs import get_config, get_reduced_config
+from repro.data.tokens import synth_token_batch
+from repro.models.api import build_model, make_train_step
+
+
+def scale_to_100m(cfg):
+    """A ~100M-param member of the same family (for the e2e example)."""
+    return replace(cfg, num_layers=max(4, min(cfg.num_layers, 8)),
+                   d_model=512, num_heads=8,
+                   num_kv_heads=min(8, max(1, cfg.num_kv_heads)),
+                   d_ff=2048, vocab_size=min(cfg.vocab_size, 32768),
+                   head_dim=0, remat="none",
+                   mrope_sections=(8, 12, 12) if cfg.mrope_sections else (),
+                   vision_tokens=min(cfg.vision_tokens, 64))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true", help="smoke-sized model")
+    ap.add_argument("--m100", action="store_true", help="~100M-param variant")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--p4", action="store_true")
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--epsilon", type=float, default=15.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.m100:
+        cfg = scale_to_100m(get_config(args.arch))
+    cfg = replace(cfg, max_seq_len=max(cfg.max_seq_len, args.seq))
+    api = build_model(cfg)
+    train_cfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                            warmup_steps=max(10, args.steps // 10))
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+
+    from repro.utils.pytree import param_count
+    params = api.init(key)
+    print(f"arch={cfg.name} params={param_count(params)/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    def make_batch(g=None):
+        toks = synth_token_batch(rng, args.batch, args.seq, cfg.vocab_size)
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            from repro.models.frontends import synth_mrope_positions, synth_vision_embeds
+            batch["vision_embeds"] = synth_vision_embeds(key, cfg, args.batch)
+            batch["mrope_positions"] = synth_mrope_positions(cfg, args.batch, args.seq)
+        if cfg.family == "audio":
+            from repro.models.frontends import synth_audio_frames
+            batch = {"frames": synth_audio_frames(key, cfg, args.batch, args.seq),
+                     "codes": jnp.asarray(rng.integers(
+                         0, cfg.vocab_size,
+                         (args.batch, args.seq, cfg.audio_codebooks)), jnp.int32)}
+        if g is not None:
+            batch = jax.tree_util.tree_map(
+                lambda t: jnp.stack([t] * 0 + [t for _ in range(g)]) if False else
+                jnp.broadcast_to(t[None], (g,) + t.shape), batch)
+        return batch
+
+    if args.p4:
+        from repro.core.p4 import make_p4_lm_step
+        from repro.optim import make_optimizer
+        G = args.groups
+        step = make_p4_lm_step(api, api, train_cfg,
+                               DPConfig(epsilon=args.epsilon, microbatches=2,
+                                        rounds=args.steps),
+                               P4Config())
+        opt = make_optimizer(train_cfg)
+
+        def stack_init(k):
+            return jax.vmap(api.init)(jax.random.split(k, G))
+        params = {"private": stack_init(key), "proxy": stack_init(jax.random.fold_in(key, 1))}
+        opt_states = {"private": jax.vmap(opt.init)(params["private"]),
+                      "proxy": jax.vmap(opt.init)(params["proxy"])}
+        step = jax.jit(step)
+        for i in range(args.steps):
+            batch = make_batch(g=G)
+            t0 = time.time()
+            params, opt_states, metrics = step(params, opt_states, batch,
+                                               jax.random.fold_in(key, i))
+            if i % args.log_every == 0:
+                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                      f"({time.time()-t0:.2f}s)", flush=True)
+    else:
+        train_step, opt = make_train_step(api, train_cfg)
+        opt_state = opt.init(params)
+        train_step = jax.jit(train_step)
+        for i in range(args.steps):
+            batch = make_batch()
+            t0 = time.time()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            if i % args.log_every == 0:
+                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                      f"ce={float(metrics['ce']):.4f} ({time.time()-t0:.2f}s)",
+                      flush=True)
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.steps, {"params": params})
+            print(f"checkpoint saved to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Public model API: build a model from a ModelConfig and get uniform
+init / loss / prefill / decode entry points plus dry-run input specs.
+
+Every step builder is a *pure function factory* — the returned callables are
+jit-able and are exactly what ``launch/dryrun.py`` lowers onto the production
+mesh and what ``launch/train.py`` executes for real.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import InputShape, MeshConfig, ModelConfig, TrainConfig
+from repro.models import transformer
+from repro.models.layers import softmax_cross_entropy
+from repro.models.module import (abstract_params, init_params, partition_specs)
+from repro.sharding.rules import batch_axes, logical_spec, make_rules
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    specs: Dict[str, Any]
+    init: Callable
+    abstract: Callable
+    loss_fn: Callable          # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable       # (params, batch) -> (last_logits, cache)
+    decode_fn: Callable        # (params, caches, batch) -> (logits, new_caches)
+    init_caches: Callable      # (batch, max_seq) -> cache pytree
+
+
+# ---------------------------------------------------------------------------
+# Losses per family
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, aux, _ = transformer.forward(params, cfg, batch)
+        if cfg.family == "audio":
+            from repro.models.frontends import apply_delay_pattern
+            codes = apply_delay_pattern(batch["codes"])          # (b, s, K)
+            ce = softmax_cross_entropy(logits[:, :-1], codes[:, 1:])
+        else:
+            tokens = batch["tokens"]
+            mask = None
+            if cfg.family == "vlm":
+                # only text positions contribute to the loss
+                v = cfg.vision_tokens
+                s = tokens.shape[1]
+                mask = (jnp.arange(1, s) >= v).astype(jnp.float32)[None, :]
+                mask = jnp.broadcast_to(mask, (tokens.shape[0], s - 1))
+            ce = softmax_cross_entropy(logits[:, :-1], tokens[:, 1:], mask=mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    """Prefill: full forward that also emits decode caches (KV for attention
+    layers, final recurrent state for SSM/hybrid layers)."""
+    def prefill_fn(params, batch):
+        logits, _, caches = transformer.forward(
+            params, cfg, batch, caches=None, return_kv=True, last_token_only=True)
+        return logits, caches
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, caches, batch):
+        logits, _, new_caches = transformer.forward(
+            params, cfg, batch, caches=caches, cache_index=batch["index"],
+            last_token_only=True)
+        return logits, new_caches
+    return decode_fn
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    cfg.validate()
+    specs = transformer.model_specs(cfg)
+    return ModelAPI(
+        cfg=cfg,
+        specs=specs,
+        init=lambda key: init_params(specs, key, cfg.param_dtype),
+        abstract=lambda: abstract_params(specs, cfg.param_dtype),
+        loss_fn=make_loss_fn(cfg),
+        prefill_fn=make_prefill_fn(cfg),
+        decode_fn=make_decode_fn(cfg),
+        init_caches=lambda b, s: transformer.init_caches(cfg, b, s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract model inputs for (arch × input-shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch: Dict[str, Any] = {"index": _sds((), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = _sds((b, 1, cfg.d_model), cfg.dtype)
+        else:
+            batch["tokens"] = _sds((b, 1), jnp.int32)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((b, 0, cfg.d_model), cfg.dtype)
+            batch["mrope_positions"] = _sds((3, b, 1), jnp.int32)
+        return batch
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, s, cfg.d_model), cfg.dtype)
+        batch["codes"] = _sds((b, s, cfg.audio_codebooks), jnp.int32)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model), cfg.dtype)
+        batch["mrope_positions"] = _sds((3, b, s), jnp.int32)
+    return batch
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape, mesh_cfg: MeshConfig,
+                    rules: Optional[dict] = None) -> Dict[str, Any]:
+    """PartitionSpecs matching :func:`input_specs` (batch over data axes)."""
+    rules = rules or make_rules(cfg, mesh_cfg, kind=shape.kind)
+    bspec = logical_spec(("batch",), rules)[0]
+    out: Dict[str, Any] = {}
+    b = shape.global_batch
+    def bsh(*rest):
+        # batch=1 (long_500k) cannot shard over the data axes — replicate.
+        return P(bspec if b > 1 else None, *rest)
+    if shape.kind == "decode":
+        out["index"] = P()
+        if cfg.family == "audio":
+            out["frames"] = bsh(None, None)
+        else:
+            out["tokens"] = bsh(None)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = bsh(None, None)
+            out["mrope_positions"] = P(None, bspec if b > 1 else None, None)
+        return out
+    if cfg.family == "audio":
+        out["frames"] = bsh(None, None)
+        out["codes"] = bsh(None, None)
+    else:
+        out["tokens"] = bsh(None)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = bsh(None, None)
+        out["mrope_positions"] = P(None, bspec if b > 1 else None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract decode caches (ShapeDtypeStructs) for serve_step lowering."""
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, shape.global_batch, shape.seq_len))
+    return caches
+
+
+def cache_shardings(cfg: ModelConfig, shape: InputShape, mesh_cfg: MeshConfig,
+                    rules: Optional[dict] = None):
+    rules = rules or make_rules(cfg, mesh_cfg, kind="decode")
+    b = shape.global_batch
+    baxes = rules["batch"] if b > 1 else None
+    kv_heads_ax = rules.get("kv_heads")
+    kv_seq_ax = rules.get("kv_seq") if b == 1 or kv_heads_ax is None else None
+
+    b_global = shape.global_batch
+
+    def spec_for(leaf_shape):
+        # KV cache layout: (L, b, S, kvh, hd)
+        if len(leaf_shape) == 5 and leaf_shape[2] == shape.seq_len:
+            return P(None, baxes, kv_seq_ax, kv_heads_ax, None)
+        # recurrent states: (units, [per,] b, ...) — find the batch dim
+        axes = [None] * len(leaf_shape)
+        if b_global > 1:
+            for i in range(1, len(leaf_shape)):
+                if leaf_shape[i] == b_global:
+                    axes[i] = baxes
+                    break
+        return P(*axes)
+
+    caches = cache_specs(cfg, shape)
+    return jax.tree_util.tree_map(lambda l: spec_for(l.shape), caches)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (what the dry-run lowers / the trainer executes)
+# ---------------------------------------------------------------------------
+
+def make_train_step(api: ModelAPI, train_cfg: TrainConfig):
+    """Standard (non-P4) train step: grads -> optimizer update. This is the
+    paper-baseline step for the 40-combination dry-run table."""
+    from repro.optim import make_optimizer
+    opt = make_optimizer(train_cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt_state, metrics
+
+    return train_step, opt
+
+
+def make_serve_step(api: ModelAPI):
+    """One decode step: append token, attend against cache, emit next logits."""
+    def serve_step(params, caches, batch):
+        logits, new_caches = api.decode_fn(params, caches, batch)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return next_token, logits, new_caches
+    return serve_step
+
+
+def make_prefill_step(api: ModelAPI, shape: InputShape):
+    return api.prefill_fn
+
+
+def param_shardings(api: ModelAPI, mesh, rules):
+    pspecs = partition_specs(api.specs, rules)
+    return jax.tree_util.tree_map(
+        lambda p: jax.sharding.NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,57 @@
+"""Modality frontend STUBS (the one allowed carve-out, per the brief).
+
+[vlm]   qwen2-vl: the ViT + merger is NOT implemented — ``input_specs()``
+        provides precomputed patch embeddings (batch, vision_tokens, d_model)
+        plus the (t, h, w) M-RoPE position streams the real merger would emit.
+[audio] musicgen: the EnCodec conv codec is NOT implemented — ``input_specs()``
+        provides precomputed frame embeddings (batch, seq, d_model); labels
+        are the K-codebook token grid with the delay pattern applied in-loss.
+
+These helpers generate *synthetic* frontend outputs with the right shapes and
+plausible statistics for smoke tests / examples; the dry-run uses
+ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def synth_vision_embeds(key, cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    v = cfg.vision_tokens
+    return jax.random.normal(key, (batch, v, cfg.d_model), jnp.float32).astype(dtype)
+
+
+def synth_mrope_positions(cfg: ModelConfig, batch: int, seq: int, grid=(8, 8)):
+    """(3, batch, seq) t/h/w positions: a vision grid followed by text tokens.
+
+    Mirrors qwen2-vl's rule: vision patches advance (h, w) within a frame at a
+    fixed t; text positions advance all three streams together starting after
+    the vision block.
+    """
+    v = min(cfg.vision_tokens, seq)
+    gh, gw = grid
+    idx = jnp.arange(seq)
+    t = jnp.where(idx < v, 0, idx - v + 1)
+    h = jnp.where(idx < v, (idx // gw) % gh, idx - v + 1)
+    w = jnp.where(idx < v, idx % gw, idx - v + 1)
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)                # (3, seq)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def synth_audio_frames(key, cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32).astype(dtype)
+
+
+def apply_delay_pattern(codes, pad_id: int = 0):
+    """MusicGen delay pattern: codebook k is shifted right by k steps.
+
+    codes: (batch, seq, K) -> delayed (batch, seq, K)."""
+    b, s, K = codes.shape
+    outs = []
+    for k in range(K):
+        shifted = jnp.pad(codes[:, : s - k, k], ((0, 0), (k, 0)), constant_values=pad_id)
+        outs.append(shifted)
+    return jnp.stack(outs, axis=-1)

@@ -1,0 +1,187 @@
+"""Mamba2 (State Space Duality) block — used by zamba2-7b [arXiv:2411.15242].
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk the recurrence is
+evaluated as a masked quadratic form (MXU-friendly batched matmuls); across
+chunks a lax.scan carries the (heads, head_dim, state) SSM state. Decode is
+the O(1) recurrent update.
+
+TPU adaptation (DESIGN.md §2): chunk length defaults to 128 so the intra-chunk
+(c × c) decay-masked matmuls are MXU-aligned; the causal depthwise conv is a
+width-4 sliding dot (unrolled shifts, no conv lowering needed).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.module import ParamSpec
+
+
+def mamba2_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner = ssm.expand * d
+    H = ssm.num_heads
+    P = ssm.head_dim or d_inner // H
+    N = ssm.state_dim
+    cw = ssm.conv_width
+    # in_proj emits [x (H*P), z (H*P), B (H*N), C (H*N), dt (H)]
+    return {
+        "in_proj": ParamSpec((d, 2 * H * P + 2 * H * N + H), ("embed", "d_inner"), init="fan_in"),
+        "conv_w": ParamSpec((cw, H * P + 2 * H * N), ("conv", "d_inner"), init="normal", scale=0.1),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm_scale": ParamSpec((H * P,), ("d_inner",), init="ones"),
+        "out_proj": ParamSpec((H * P, d), ("d_inner", "embed"), init="fan_in"),
+    }
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.num_heads
+    P = cfg.ssm.head_dim or d_inner // H
+    N = cfg.ssm.state_dim
+    return H, P, N
+
+
+def _split_proj(proj, H, P, N):
+    xz, rest = jnp.split(proj, [2 * H * P], axis=-1)
+    x, z = jnp.split(xz, 2, axis=-1)
+    B, C, dt = jnp.split(rest, [H * N, 2 * H * N], axis=-1)
+    return x, z, B, C, dt
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv via shifted adds. u: (b, s, ch), w: (cw, ch).
+
+    state: (b, cw-1, ch) trailing context (decode); returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)                   # (b, s+cw-1, ch)
+    y = sum(full[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(cw))
+    new_state = full[:, -(cw - 1):, :] if cw > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None, unroll: bool = False):
+    """SSD scan. x: (b, s, H, P), dt: (b, s, H), A: (H,) (negative),
+    B, C: (b, s, H, N). Returns (y (b,s,H,P), final_state (b,H,P,N))."""
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # discretization
+    dA = dt * A[None, None, :]                                  # (b, s, H) log-decay
+    xb = (x * dt[..., None]).reshape(b, nc, chunk, H, P)
+    Bc = B.reshape(b, nc, chunk, H, N)
+    Cc = C.reshape(b, nc, chunk, H, N)
+    dAc = dA.reshape(b, nc, chunk, H)
+    cum = jnp.cumsum(dAc, axis=2)                               # (b, nc, c, H)
+    total = cum[:, :, -1]                                       # (b, nc, H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :]                                  # (b,nc,c,1,H)
+    lj = cum[:, :, None, :, :]                                  # (b,nc,1,c,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    G = jnp.einsum("bnchm,bnkhm->bnckh", Cc, Bc)                # (b,nc,c,c,H)
+    y_intra = jnp.einsum("bnckh,bnckh,bnkhp->bnchp", G, Lmat, xb)
+
+    # chunk-final states: S_n = sum_j exp(total - cum_j) B_j x_j^T
+    decay_to_end = jnp.exp(total[:, :, None] - cum)             # (b,nc,c,H)
+    S_chunk = jnp.einsum("bnch,bnchm,bnchp->bnhpm", decay_to_end, Bc, xb)
+
+    # inter-chunk scan
+    def body(S, inp):
+        S_c, tot, Cb, cumb = inp
+        y_off = jnp.einsum("bchm,bhpm,bch->bchp", Cb, S, jnp.exp(cumb))
+        S_new = S * jnp.exp(tot)[:, :, None, None] + S_c
+        return S_new, y_off
+
+    S0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    xs = (
+        S_chunk.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+        total.transpose(1, 0, 2),
+        Cc.transpose(1, 0, 2, 3, 4),
+        cum.transpose(1, 0, 2, 3),
+    )
+    # NOTE: stays a scan even in cost-lowering mode — its once-counted body is
+    # corrected analytically in launch/dryrun.py (_inner_scan_correction).
+    S_final, y_off = lax.scan(body, S0, xs)
+    y_off = y_off.transpose(1, 0, 2, 3, 4)                      # (b,nc,c,H,P)
+    y = (y_intra + y_off.astype(y_intra.dtype)).reshape(b, s, H, P)
+    return y, S_final
+
+
+def mamba2_apply(params, x_in, cfg: ModelConfig, cache=None, return_state: bool = False):
+    """x_in: (b, s, d_model). cache (decode): {"conv": (b,cw-1,ch), "ssm": (b,H,P,N)}.
+
+    return_state (prefill): start from zero state and return the final state
+    as a fresh cache. Returns (out, new_cache)."""
+    H, P, N = _dims(cfg)
+    b, s, _ = x_in.shape
+    dtype = x_in.dtype
+    proj = jnp.einsum("bsd,de->bse", x_in, params["in_proj"].astype(dtype))
+    x, z, B, C, dt = _split_proj(proj, H, P, N)
+    conv_in = jnp.concatenate([x, B, C], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"].astype(dtype), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    x, B, C = jnp.split(conv_out, [H * P, H * P + H * N], axis=-1)
+    x = x.reshape(b, s, H, P)
+    B = B.reshape(b, s, H, N)
+    C = C.reshape(b, s, H, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # (H,) negative
+
+    if cache is not None and s == 1:
+        # O(1) recurrent decode step
+        S = cache["ssm"].astype(jnp.float32)                    # (b, H, P, N)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                     # (b, H)
+        dBx = jnp.einsum("bhm,bhp,bh->bhpm", B[:, 0].astype(jnp.float32),
+                          x[:, 0].astype(jnp.float32), dt[:, 0])
+        S_new = S * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhm,bhpm->bhp", C[:, 0].astype(jnp.float32), S_new)
+        y = y[:, None]                                          # (b,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": S_new.astype(cache["ssm"].dtype)}
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, S_final = _ssd_chunked(x.astype(jnp.float32), dt, A,
+                                  B.astype(jnp.float32), C.astype(jnp.float32),
+                                  cfg.ssm.chunk_size, init,
+                                  unroll=cfg.unroll_inner)
+        if cache is not None or return_state:
+            new_cache = {"conv": new_conv, "ssm": S_final}
+        else:
+            new_cache = None
+
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, H * P).astype(dtype)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * lax.rsqrt(var + cfg.norm_eps)
+         * params["norm_scale"].astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dtype))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, num_layers: int, dtype=jnp.float32):
+    H, P, N = _dims(cfg)
+    ch = H * P + 2 * H * N
+    cw = cfg.ssm.conv_width
+    return {
+        "conv": jnp.zeros((num_layers, batch, cw - 1, ch), dtype),
+        "ssm": jnp.zeros((num_layers, batch, H, P, N), dtype),
+    }

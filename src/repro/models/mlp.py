@@ -1,0 +1,22 @@
+"""Gated MLPs (SwiGLU) — the dense FFN used by every assigned transformer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec
+
+
+def swiglu_specs(d_model: int, d_ff: int):
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "ffn"), init="fan_in"),
+        "w_in": ParamSpec((d_model, d_ff), ("embed", "ffn"), init="fan_in"),
+        "w_out": ParamSpec((d_ff, d_model), ("ffn", "embed"), init="fan_in"),
+    }
+
+
+def swiglu(params, x):
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * h, params["w_out"].astype(dtype))

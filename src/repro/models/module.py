@@ -1,0 +1,116 @@
+"""Minimal pytree-module system.
+
+A model is described by a nested dict of :class:`ParamSpec` (shape + logical
+dims + init), from which we derive, in one place:
+
+  * concrete parameters            (``init_params``)
+  * ``jax.ShapeDtypeStruct`` trees (``abstract_params``)   — for the dry-run
+  * ``PartitionSpec`` trees        (``partition_specs``)   — from logical dims
+
+This removes the usual duplication between "the model code" and "the sharding
+map": every parameter names its logical dimensions exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]          # logical dim names (len == len(shape))
+    init: str = "normal"                     # normal | zeros | ones | fan_in
+    scale: float = 0.02
+    dtype: Optional[str] = None              # override model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaves_with_path(tree):
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)
+
+
+def stack_specs(tree, num: int, dim_name: str = "layers"):
+    """Prepend a stacking dimension (for ``lax.scan`` over layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: dataclasses.replace(
+            s, shape=(num,) + s.shape, dims=(dim_name,) + s.dims
+        ),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def init_params(spec_tree, key, param_dtype: str = "float32"):
+    paths, treedef = _leaves_with_path(spec_tree)
+    keys = jax.random.split(key, max(len(paths), 1))
+    out = []
+    for (path, spec), k in zip(paths, keys):
+        dtype = jnp.dtype(spec.dtype or param_dtype)
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        elif spec.init == "fan_in":
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            v = (jax.random.normal(k, spec.shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+        else:  # normal
+            v = (jax.random.normal(k, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, param_dtype: str = "float32"):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype)),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def partition_specs(spec_tree, rules: dict):
+    """Logical dims -> PartitionSpec via ``rules`` (dim name -> mesh axis or None).
+
+    A mesh axis may appear only once in a spec; later duplicates are dropped
+    (replicated) — this is what makes e.g. expert-parallel over the same axis
+    as FSDP compose safely.
+    """
+
+    def one(spec: ParamSpec) -> PartitionSpec:
+        used, axes = set(), []
+        for d in spec.dims:
+            ax = rules.get(d) if d is not None else None
+            if ax is None:
+                axes.append(None)
+                continue
+            ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+            ax_t = tuple(a for a in ax_t if a not in used)
+            if not ax_t:
+                axes.append(None)
+            else:
+                used.update(ax_t)
+                axes.append(ax_t[0] if len(ax_t) == 1 else ax_t)
+        return PartitionSpec(*axes)
+
+    return jax.tree_util.tree_map(one, spec_tree, is_leaf=is_spec)
+
+
+def named_shardings(spec_tree, rules: dict, mesh):
+    pspecs = partition_specs(spec_tree, rules)
+    return jax.tree_util.tree_map(
+        lambda p: jax.sharding.NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

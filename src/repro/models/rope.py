@@ -1,0 +1,48 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head_dim/2 frequency channels into
+(temporal, height, width) sections and rotates each section by a different
+position stream; text tokens use identical (t,h,w) positions, so M-RoPE
+degenerates to RoPE on pure text.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: broadcastable (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections, theta: float = 10000.0):
+    """M-RoPE. x: (batch, seq, heads, head_dim); positions_thw: (3, batch, seq);
+    sections: per-stream channel counts summing to head_dim // 2."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                               # (half,)
+    # Build a per-channel position by selecting the (t|h|w) stream per section.
+    angle_parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos = positions_thw[i]                                  # (batch, seq)
+        angle_parts.append(pos[..., None].astype(jnp.float32) * freqs[off:off + sec])
+        off += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)              # (batch, seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,236 @@
+"""xLSTM blocks (sLSTM + mLSTM) — xlstm-125m [arXiv:2405.04517].
+
+mLSTM: matrix-memory LSTM with exponential gating. Implemented in the
+*chunkwise-parallel* form (stabilized, like the official mlstm chunkwise
+kernels): within a chunk the output is a decay-masked quadratic form
+(MXU matmuls), across chunks a lax.scan carries (C, n, m). Decode is the
+O(1) recurrence — this is what makes long_500k a legal shape for this arch.
+
+sLSTM: scalar-memory LSTM with per-head block-diagonal recurrence — strictly
+sequential, lax.scan over time (one While loop in HLO regardless of length).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.module import ParamSpec
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    return {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+        "wk": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+        "wv": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+        "w_if": ParamSpec((d, H, 2), ("embed", "heads", None), init="normal", scale=0.01),
+        "b_if": ParamSpec((H, 2), ("heads", None), init="zeros"),
+        "w_o": ParamSpec((d, d), ("embed", "d_inner"), init="fan_in"),
+        "out_proj": ParamSpec((d, d), ("d_inner", "embed"), init="fan_in"),
+    }
+
+
+def _mlstm_chunk(q, k, v, logi, logf, carry, chunk_idx):
+    """One chunk. q,k,v: (b,H,c,hd); logi,logf: (b,H,c);
+    carry = (C (b,H,hd,hd), n (b,H,hd), m (b,H))."""
+    C_prev, n_prev, m_prev = carry
+    b, H, c, hd = q.shape
+    F = jnp.cumsum(logf, axis=-1)                                # (b,H,c)
+    # D_ij = F_i - F_j + logi_j  (j <= i)
+    D = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(mask, D, -jnp.inf)
+    m_intra = jnp.max(D, axis=-1)                                # (b,H,c)
+    m_inter = F + m_prev[..., None]                              # carried-state decay
+    m_tot = jnp.maximum(m_intra, m_inter)                        # (b,H,c)
+    w_intra = jnp.exp(D - m_tot[..., None])                      # (b,H,c,c)
+    w_inter = jnp.exp(m_inter - m_tot)                           # (b,H,c)
+
+    scale = 1.0 / jnp.sqrt(hd)
+    s = jnp.einsum("bhcd,bhkd->bhck", q, k) * scale              # (b,H,c,c)
+    h_intra = jnp.einsum("bhck,bhck,bhkd->bhcd", s, w_intra, v)
+    h_inter = jnp.einsum("bhcd,bhde->bhce", q * scale, C_prev) * w_inter[..., None]
+    n_vec = (jnp.einsum("bhck,bhck,bhkd->bhcd", s * 0 + 1.0, w_intra, k)
+             + n_prev[:, :, None, :] * w_inter[..., None])
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhcd,bhcd->bhc", q * scale, n_vec)),
+                        jnp.exp(-m_tot)) + EPS
+    h = (h_intra + h_inter) / denom[..., None]                   # (b,H,c,hd)
+
+    # carry update to end of chunk
+    m_next = jnp.maximum(F[..., -1] + m_prev, jnp.max(D[..., -1, :], axis=-1))
+    w_end = jnp.exp(F[..., -1:] - F + logi - m_next[..., None])  # (b,H,c)
+    C_next = (C_prev * jnp.exp(F[..., -1] + m_prev - m_next)[..., None, None]
+              + jnp.einsum("bhck,bhcd,bhce->bhde", w_end[..., None] * 0 + w_end[..., None],
+                            k, v))
+    n_next = (n_prev * jnp.exp(F[..., -1] + m_prev - m_next)[..., None]
+              + jnp.einsum("bhc,bhcd->bhd", w_end, k))
+    return (C_next, n_next, m_next), h
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, cache=None, chunk: int = 256,
+                return_state: bool = False):
+    """x: (b, s, d). cache (decode): {"C","n","m"}. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(dtype)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(dtype)).astype(jnp.float32)
+    gates = (jnp.einsum("bsd,dhg->bhsg", x, params["w_if"].astype(dtype)).astype(jnp.float32)
+             + params["b_if"].astype(jnp.float32)[None, :, None, :])
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])                     # (b,H,s)
+
+    if cache is not None and s == 1:
+        C_prev = cache["C"].astype(jnp.float32)
+        n_prev = cache["n"].astype(jnp.float32)
+        m_prev = cache["m"].astype(jnp.float32)
+        li, lf = logi[..., 0], logf[..., 0]
+        m_new = jnp.maximum(lf + m_prev, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m_prev - m_new)
+        scale = 1.0 / jnp.sqrt(hd)
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, :, 0], v[:, :, 0])
+        C_new = f_s[..., None, None] * C_prev + i_s[..., None, None] * kv
+        n_new = f_s[..., None] * n_prev + i_s[..., None] * k[:, :, 0]
+        qs = q[:, :, 0] * scale
+        num = jnp.einsum("bhd,bhde->bhe", qs, C_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n_new)),
+                          jnp.exp(-m_new)) + EPS
+        h = (num / den[..., None])[:, :, None, :]                # (b,H,1,hd)
+        new_cache = {"C": C_new.astype(cache["C"].dtype),
+                     "n": n_new.astype(cache["n"].dtype),
+                     "m": m_new.astype(cache["m"].dtype)}
+    else:
+        chunk = min(chunk, s)
+        assert s % chunk == 0
+        nc = s // chunk
+        def to_chunks(t):
+            return t.reshape(b, H, nc, chunk, *t.shape[3:]).transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+        qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+        lis = logi.reshape(b, H, nc, chunk).transpose(2, 0, 1, 3)
+        lfs = logf.reshape(b, H, nc, chunk).transpose(2, 0, 1, 3)
+        if cache is not None:
+            carry0 = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                      cache["m"].astype(jnp.float32))
+        else:
+            carry0 = (jnp.zeros((b, H, hd, hd), jnp.float32),
+                      jnp.zeros((b, H, hd), jnp.float32),
+                      jnp.full((b, H), 0.0, jnp.float32))
+        def body(carry, inp):
+            qc, kc, vc, lic, lfc, ci = inp
+            carry, h = _mlstm_chunk(qc, kc, vc, lic, lfc, carry, ci)
+            return carry, h
+        # stays a scan in cost mode; corrected analytically (launch/dryrun.py)
+        carry, hs = lax.scan(body, carry0, (qs, ks, vs, lis, lfs, jnp.arange(nc)))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(b, H, s, hd)
+        if cache is not None or return_state:
+            new_cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+            if cache is not None:
+                new_cache = {k: v.astype(cache[k].dtype) for k, v in new_cache.items()}
+        else:
+            new_cache = None
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d).astype(dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, params["w_o"].astype(dtype)))
+    out = jnp.einsum("bse,ed->bsd", h * o, params["out_proj"].astype(dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    return {
+        "w_in": ParamSpec((d, 4, H, hd), ("embed", None, "heads", "head_dim"),
+                          init="normal", scale=0.02),
+        "r": ParamSpec((4, H, hd, hd), (None, "heads", "head_dim", None),
+                       init="normal", scale=0.02),
+        "b": ParamSpec((4, H, hd), (None, "heads", "head_dim"), init="zeros"),
+        "out_proj": ParamSpec((d, d), ("d_inner", "embed"), init="fan_in"),
+    }
+
+
+def _slstm_step(params32, carry, wx_t):
+    """carry = (c, n, h, m) each (b,H,hd); wx_t: (b,4,H,hd)."""
+    r, bias = params32
+    c, n, h, m = carry
+    rec = jnp.einsum("ghde,bhe->bghd", r, h)                     # (b,4,H,hd)
+    pre = wx_t + rec + bias[None]
+    li = pre[:, 0]                                               # log input gate
+    lf = jax.nn.log_sigmoid(pre[:, 1])                           # log forget gate
+    z = jnp.tanh(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, EPS)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, x, cfg: ModelConfig, cache=None, return_state: bool = False):
+    """x: (b, s, d). cache: {"c","n","h","m"} each (b,H,hd)."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    dtype = x.dtype
+    wx = jnp.einsum("bsd,dghk->bsghk", x, params["w_in"].astype(dtype)).astype(jnp.float32)
+    r = params["r"].astype(jnp.float32)
+    bias = params["b"].astype(jnp.float32)
+    if cache is not None:
+        carry0 = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+    else:
+        zero = jnp.zeros((b, H, hd), jnp.float32)
+        carry0 = (zero, zero, zero, zero)
+
+    def body(carry, wx_t):
+        new = _slstm_step((r, bias), carry, wx_t)
+        return new, new[2]
+
+    carry, hs = lax.scan(body, carry0, wx.transpose(1, 0, 2, 3, 4))  # scan over seq
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", h, params["out_proj"].astype(dtype))
+    new_cache = None
+    if cache is not None or return_state:
+        new_cache = dict(zip(("c", "n", "h", "m"), carry))
+        if cache is not None:
+            new_cache = {k: v.astype(cache[k].dtype) for k, v in new_cache.items()}
+    return out, new_cache
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, num_units: int, dtype=jnp.float32):
+    """Per-unit caches for the (pattern-cycled) xLSTM stack."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    caches = []
+    for kind in cfg.xlstm_pattern:
+        if kind == "m":
+            caches.append({
+                "C": jnp.zeros((num_units, batch, H, hd, hd), dtype),
+                "n": jnp.zeros((num_units, batch, H, hd), dtype),
+                "m": jnp.zeros((num_units, batch, H), dtype),
+            })
+        else:
+            caches.append({
+                k: jnp.zeros((num_units, batch, H, hd), dtype)
+                for k in ("c", "n", "h", "m")
+            })
+    return caches

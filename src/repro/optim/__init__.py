@@ -1,0 +1,2 @@
+from repro.optim.optimizers import make_optimizer, Optimizer
+from repro.optim.schedules import make_schedule

@@ -1,0 +1,92 @@
+"""Pure-JAX optimizers over pytrees (no optax dependency).
+
+Moments are stored in the parameter dtype by default so bf16-parameter
+configs (llama4-maverick) keep the optimizer-state HBM budget at 8 B/param
+(see DESIGN.md §6 memory table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.optim.schedules import make_schedule
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> state
+    update: Callable          # (grads, state, params) -> (new_params, new_state)
+    name: str = "adamw"
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    schedule = make_schedule(cfg)
+
+    if cfg.optimizer in ("adam", "adamw"):
+        wd = cfg.weight_decay if cfg.optimizer == "adamw" else 0.0
+        b1, b2, eps = cfg.beta1, cfg.beta2, 1e-8
+
+        def init(params):
+            zeros = lambda p: jnp.zeros_like(p)
+            return {"m": jax.tree_util.tree_map(zeros, params),
+                    "v": jax.tree_util.tree_map(zeros, params),
+                    "count": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            count = state["count"] + 1
+            lr = schedule(count)
+            c1 = 1.0 - b1 ** count.astype(jnp.float32)
+            c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+            def upd(g, m, v, p):
+                g32 = g.astype(jnp.float32)
+                m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+                v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+                step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+                if wd:
+                    step = step + wd * p.astype(jnp.float32)
+                p_new = p.astype(jnp.float32) - lr * step
+                return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+            out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+            new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, {"m": new_m, "v": new_v, "count": count}
+
+        return Optimizer(init, update, cfg.optimizer)
+
+    if cfg.optimizer in ("sgd", "momentum"):
+        mu = 0.9 if cfg.optimizer == "momentum" else 0.0
+
+        def init(params):
+            state = {"count": jnp.zeros((), jnp.int32)}
+            if mu:
+                state["m"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+            return state
+
+        def update(grads, state, params):
+            count = state["count"] + 1
+            lr = schedule(count)
+            if mu:
+                new_m = jax.tree_util.tree_map(
+                    lambda m, g: mu * m + g.astype(m.dtype), state["m"], grads)
+                new_params = jax.tree_util.tree_map(
+                    lambda p, m: (p.astype(jnp.float32) - lr * m.astype(jnp.float32)).astype(p.dtype),
+                    params, new_m)
+                return new_params, {"m": new_m, "count": count}
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, {"count": count}
+
+        return Optimizer(init, update, cfg.optimizer)
+
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    base = cfg.learning_rate
+    warm = max(cfg.warmup_steps, 1)
+    total = max(cfg.total_steps, warm + 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warmup = base * jnp.minimum(step / warm, 1.0)
+        frac = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            decay = 1.0 - frac
+        else:
+            decay = 1.0
+        return jnp.where(step < warm, warmup, base * decay)
+
+    return schedule

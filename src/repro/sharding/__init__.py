@@ -1,0 +1,1 @@
+from repro.sharding.rules import make_rules, batch_axes, logical_spec

@@ -1,0 +1,10 @@
+from repro.utils.pytree import (
+    tree_flatten_concat,
+    tree_unflatten_concat,
+    global_norm,
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    param_count,
+    tree_size_bytes,
+)

@@ -1,0 +1,80 @@
+"""Pytree utilities used across the framework (pure JAX, no deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_flatten_concat(tree, dtype=jnp.float32):
+    """Flatten a pytree of arrays into a single 1-D vector.
+
+    Used by the P4 grouping phase (l1-norm over ``vec(w_i)``, paper Eq. 3)
+    and by the DP clipping kernel (per-example flat gradients).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype)
+    return jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+
+
+def tree_unflatten_concat(flat, tree):
+    """Inverse of :func:`tree_flatten_concat` given a template ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(jnp.reshape(flat[off : off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def global_norm(tree):
+    """l2 norm over every leaf of a pytree (DP clipping, Eq. 10)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_l1_distance(a, b):
+    """Paper Eq. 3: dissimilarity(i, j) = ||vec(w_i) - vec(w_j)||_1."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(
+        jnp.sum(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32)))
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_size_bytes(tree) -> int:
+    return int(
+        sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def split_like(key, tree):
+    """One PRNG key per leaf, as a pytree shaped like ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests run on the single real host device (the dry-run's 512 placeholder
+# devices are set ONLY inside launch/dryrun.py subprocesses — see brief)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

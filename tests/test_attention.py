@@ -1,0 +1,103 @@
+"""Attention correctness: chunked (flash-algorithm) vs full, windows, GQA,
+decode-vs-teacher-forcing consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, replace
+from repro.models.attention import _chunked_attention, _full_attention, attention
+
+
+def _cfg(**kw):
+    base = dict(d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                vocab_size=128, dtype="float32", param_dtype="float32",
+                logits_dtype="float32", remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("s", [128, 256])
+def test_chunked_matches_full(key, window, s):
+    cfg = _cfg()
+    b, hq, hkv, hd = 2, 4, 2, 16
+    q = jax.random.normal(key, (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, hd))
+    pos = jnp.arange(s)
+    full = _full_attention(q, k, v, cfg, pos, pos, window)
+    chunked = _chunked_attention(q, k, v, cfg, window, q_chunk=64, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_teacher_forcing(key):
+    """Logits from (prefill s-1 tokens, then decode 1) == full forward."""
+    from repro.configs import get_reduced_config
+    from repro.models.api import build_model
+    cfg = replace(get_reduced_config("llama3.2-1b"),
+                  dtype="float32", logits_dtype="float32",
+                  kv_cache_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(key)
+    b, s = 2, 24
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    from repro.models import transformer
+    logits_full, _, _ = transformer.forward(params, cfg, {"tokens": tokens})
+    want = logits_full[:, -1]
+
+    # prefill on s-1 tokens, decode token s-1
+    lg, cache = api.prefill_fn(params, {"tokens": tokens[:, :-1]})
+    full_cache = api.init_caches(b, s)
+    cache = jax.tree_util.tree_map(
+        lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), 0, axis=2), full_cache, cache)
+    got, _ = api.decode_fn(params, cache,
+                           {"tokens": tokens[:, -1:],
+                            "index": jnp.asarray(s - 1, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got[:, 0]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_gqa_kv_expansion_equivalence(key):
+    """GQA with kv groups == MHA with repeated kv heads."""
+    cfg = _cfg()
+    b, s, hq, hkv, hd = 1, 64, 4, 2, 16
+    q = jax.random.normal(key, (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, hd))
+    pos = jnp.arange(s)
+    gqa = _full_attention(q, k, v, cfg, pos, pos, 0)
+    mha = _full_attention(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2),
+                          _cfg(num_kv_heads=4), pos, pos, 0)
+    np.testing.assert_allclose(np.asarray(gqa), np.asarray(mha), rtol=1e-5, atol=1e-5)
+
+
+def test_window_masks_distant_tokens(key):
+    """With window w, changing a key beyond the window cannot change output."""
+    cfg = _cfg()
+    b, s, h, hd = 1, 64, 2, 8
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    out1 = _full_attention(q, k, v, _cfg(num_kv_heads=2), pos, pos, 16)
+    k2 = k.at[:, 0].set(99.0)   # token 0 is outside the window of the last query
+    v2 = v.at[:, 0].set(99.0)
+    out2 = _full_attention(q, k2, v2, _cfg(num_kv_heads=2), pos, pos, 16)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mrope_degenerates_to_rope_on_text(key):
+    """Equal (t,h,w) positions => M-RoPE == RoPE (qwen2-vl property)."""
+    from repro.models.rope import apply_mrope, apply_rope
+    b, s, h, hd = 2, 16, 2, 16
+    x = jax.random.normal(key, (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    thw = jnp.broadcast_to(pos[None], (3, b, s))
+    got = apply_mrope(x, thw, (2, 3, 3))
+    want = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

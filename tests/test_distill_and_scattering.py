@@ -1,0 +1,74 @@
+"""Knowledge-distillation losses (Eqs. 6–9) + ScatterNet features (§4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import private_loss, proxy_loss
+from repro.core.scattering import scatter_feature_dim, scatternet_features
+from repro.models.layers import kl_divergence, softmax_cross_entropy
+
+
+def test_alpha_zero_is_pure_ce(key):
+    lg1 = jax.random.normal(key, (8, 10))
+    lg2 = jax.random.normal(jax.random.fold_in(key, 1), (8, 10))
+    y = jnp.arange(8) % 10
+    assert float(proxy_loss(lg1, lg2, y, alpha=0.0)) == pytest.approx(
+        float(softmax_cross_entropy(lg1, y)), rel=1e-6)
+    assert float(private_loss(lg1, lg2, y, beta=0.0)) == pytest.approx(
+        float(softmax_cross_entropy(lg1, y)), rel=1e-6)
+
+
+def test_kl_self_zero(key):
+    lg = jax.random.normal(key, (4, 7))
+    assert abs(float(kl_divergence(lg, lg))) < 1e-6
+
+
+def test_kl_nonnegative(key):
+    p = jax.random.normal(key, (16, 9))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (16, 9))
+    assert float(kl_divergence(p, q)) >= 0.0
+
+
+def test_distill_targets_stop_gradient(key):
+    """The KL target carries no gradient (deep-mutual-learning semantics)."""
+    y = jnp.zeros((4,), jnp.int32)
+    w1 = jax.random.normal(key, (3, 5))
+    w2 = jax.random.normal(jax.random.fold_in(key, 1), (3, 5))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, 3))
+
+    def loss_wrt_target(w_tgt):
+        return proxy_loss(x @ w1, x @ w_tgt, y, alpha=0.7)
+    g = jax.grad(loss_wrt_target)(w2)
+    assert float(jnp.max(jnp.abs(g))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ScatterNet
+# ---------------------------------------------------------------------------
+
+def test_scattering_dims_match_paper():
+    """81 channels grayscale, 243 RGB, spatial /4 (paper §4.2)."""
+    assert scatter_feature_dim((28, 28, 1)) == 81 * 7 * 7
+    assert scatter_feature_dim((32, 32, 3)) == 243 * 8 * 8
+
+
+@pytest.mark.parametrize("shape", [(28, 28, 1), (32, 32, 3)])
+def test_scattering_output_shape(key, shape):
+    x = jax.random.normal(key, (3,) + shape)
+    f = scatternet_features(x)
+    assert f.shape == (3, scatter_feature_dim(shape))
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_scattering_translation_stability(key):
+    """Scattering features move less under a 2-px shift than raw pixels
+    (the whole point of the handcrafted frontend)."""
+    x = np.zeros((1, 28, 28, 1), np.float32)
+    x[0, 10:18, 10:18, 0] = 1.0
+    xs = np.roll(x, 2, axis=2)
+    f1 = np.asarray(scatternet_features(jnp.asarray(x), normalize=False))
+    f2 = np.asarray(scatternet_features(jnp.asarray(xs), normalize=False))
+    rel_feat = np.linalg.norm(f1 - f2) / np.linalg.norm(f1)
+    rel_raw = np.linalg.norm(x - xs) / np.linalg.norm(x)
+    assert rel_feat < rel_raw

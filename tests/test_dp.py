@@ -1,0 +1,112 @@
+"""DP machinery: Eqs. 10–12, accountant, per-example vs microbatch grads."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp as dp_lib
+from repro.utils.pytree import global_norm
+
+
+def test_clip_bounds_norm(key):
+    tree = {"a": jax.random.normal(key, (8, 8)) * 10, "b": jnp.ones((3,)) * 5}
+    clipped, norm = dp_lib.clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    small = jax.tree_util.tree_map(lambda t: t * 1e-3, tree)
+    clipped2, _ = dp_lib.clip_by_global_norm(small, 1.0)
+    # below the clip, gradients pass through unchanged
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), np.asarray(small["a"]),
+                               rtol=1e-6)
+
+
+def test_noble_sigma_eq12_formula():
+    """σ_g = s·sqrt(l T K log(2Tl/δ) log(2/δ)) / (ε sqrt(M'))."""
+    eps, delta, s, T, K = 15.0, 1e-3, 0.5, 100, 2
+    got = dp_lib.noble_sigma(eps, delta, sample_rate=s, rounds=T, local_steps=K)
+    want = s * math.sqrt(1 * T * K * math.log(2 * T / delta)
+                         * math.log(2 / delta)) / eps
+    assert abs(got - want) < 1e-9
+    # tighter ε ⇒ more noise; more rounds ⇒ more noise
+    assert dp_lib.noble_sigma(3.0, delta, rounds=T) > got
+    assert dp_lib.noble_sigma(eps, delta, rounds=4 * T) > got
+
+
+def test_rdp_accountant_monotone():
+    e1 = dp_lib.rdp_epsilon(sigma=2.0, q=0.1, steps=100, delta=1e-5)
+    e2 = dp_lib.rdp_epsilon(sigma=4.0, q=0.1, steps=100, delta=1e-5)
+    e3 = dp_lib.rdp_epsilon(sigma=2.0, q=0.1, steps=400, delta=1e-5)
+    assert e2 < e1 < e3
+
+
+def test_calibrate_sigma_achieves_target():
+    target = 8.0
+    sigma = dp_lib.calibrate_sigma(target, 1e-5, q=0.2, steps=200)
+    eps = dp_lib.rdp_epsilon(sigma, 0.2, 200, 1e-5)
+    assert eps <= target + 1e-2
+    # not absurdly conservative either
+    eps_lo = dp_lib.rdp_epsilon(sigma * 0.8, 0.2, 200, 1e-5)
+    assert eps_lo > target
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def test_dp_gradients_zero_noise_matches_clipped_mean(key):
+    params = {"w": jax.random.normal(key, (4, 2))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 4)) * 3
+    y = jax.random.normal(jax.random.fold_in(key, 2), (8, 2))
+    g = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y},
+                            jax.random.fold_in(key, 3), clip=0.1, sigma=0.0)
+    # per-example clipped mean: norm of the mean must be <= clip
+    assert float(global_norm(g)) <= 0.1 + 1e-6
+
+
+def test_dp_gradients_sensitivity_bound(key):
+    """Core DP invariant: swapping ONE example changes the (pre-noise)
+    clipped-mean gradient by at most 2C/n in l2."""
+    n, C = 16, 0.5
+    params = {"w": jax.random.normal(key, (4, 2))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, 4)) * 5
+    y = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
+    x2 = x.at[0].set(-x[0] * 7)
+    y2 = y.at[0].set(y[0] + 11)
+    g1 = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y},
+                             key, clip=C, sigma=0.0)
+    g2 = dp_lib.dp_gradients(_quad_loss, params, {"x": x2, "y": y2},
+                             key, clip=C, sigma=0.0)
+    diff = jax.tree_util.tree_map(lambda a, b: a - b, g1, g2)
+    assert float(global_norm(diff)) <= 2 * C / n + 1e-6
+
+
+def test_dp_gradients_noise_statistics(key):
+    """Eq. 11 noise scale: std ≈ 2Cσ/n on each coordinate."""
+    params = {"w": jnp.zeros((1, 1))}
+    batch = {"x": jnp.zeros((4, 1)), "y": jnp.zeros((4, 1))}
+    C, sigma, n = 1.0, 3.0, 4
+    samples = []
+    for i in range(300):
+        g = dp_lib.dp_gradients(_quad_loss, params, batch,
+                                jax.random.fold_in(key, i), clip=C, sigma=sigma)
+        samples.append(float(g["w"][0, 0]))
+    std = np.std(samples)
+    expect = 2 * C * sigma / n
+    assert 0.8 * expect < std < 1.2 * expect
+
+
+def test_microbatch_matches_per_example_when_mb_is_1(key):
+    """microbatches == n reduces to per-example clipping."""
+    n = 8
+    params = {"w": jax.random.normal(key, (3, 2))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, 3)) * 4
+    y = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
+    k = jax.random.fold_in(key, 3)
+    g_pe = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y}, k,
+                               clip=0.3, sigma=0.0, microbatches=0)
+    g_mb = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y}, k,
+                               clip=0.3, sigma=0.0, microbatches=n)
+    np.testing.assert_allclose(np.asarray(g_pe["w"]), np.asarray(g_mb["w"]),
+                               rtol=1e-5, atol=1e-6)

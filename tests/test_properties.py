@@ -1,0 +1,101 @@
+"""Hypothesis property tests on the system's invariants (brief §c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp as dp_lib
+from repro.core.grouping import greedy_group_formation
+from repro.core.p4 import group_mean
+from repro.models.layers import softmax_cross_entropy
+from repro.models.rope import apply_rope
+from repro.utils.pytree import (global_norm, tree_flatten_concat,
+                                tree_unflatten_concat)
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(st.integers(1, 6), st.integers(1, 32), st.floats(0.05, 10.0))
+def test_clip_never_exceeds_bound(seed, dim, clip):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (dim, 3)) * 20,
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (dim,)) * 20}
+    clipped, _ = dp_lib.clip_by_global_norm(tree, clip)
+    assert float(global_norm(clipped)) <= clip * (1 + 1e-4)
+
+
+@_settings
+@given(st.integers(0, 5), st.integers(2, 5), st.integers(2, 48))
+def test_rope_preserves_norm(seed, heads, seq):
+    """Rotation ⇒ per-head-vector l2 norms unchanged."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, seq, heads, 16))
+    pos = jnp.arange(seq)[None]
+    y = apply_rope(x, pos)
+    n1 = jnp.linalg.norm(x, axis=-1)
+    n2 = jnp.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 5), st.integers(2, 20))
+def test_cross_entropy_nonnegative_and_bounded_below_by_optimal(seed, classes):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (8, classes)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (8,), 0, classes)
+    ce = float(softmax_cross_entropy(logits, labels))
+    assert ce >= 0.0
+
+
+@_settings
+@given(st.integers(0, 5), st.integers(4, 24), st.integers(2, 6))
+def test_group_mean_idempotent_and_preserves_sum(seed, M, G):
+    """Aggregation is a projection: applying it twice == once; the global sum
+    of the stacked tree is preserved (means weighted by group sizes)."""
+    key = jax.random.PRNGKey(seed)
+    ids = jnp.asarray(np.random.default_rng(seed).integers(0, G, M))
+    tree = {"w": jax.random.normal(key, (M, 5))}
+    once = group_mean(tree, ids, G)
+    twice = group_mean(once, ids, G)
+    np.testing.assert_allclose(np.asarray(once["w"]), np.asarray(twice["w"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(once["w"])),
+                               float(jnp.sum(tree["w"])), rtol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 8), st.integers(6, 20), st.integers(2, 6))
+def test_grouping_always_partitions(seed, M, T):
+    rng = np.random.default_rng(seed)
+    d = np.abs(rng.normal(size=(M, M)))
+    d = d + d.T
+    np.fill_diagonal(d, 0)
+    groups = greedy_group_formation(d, group_size=T,
+                                    sample_peers=min(M - 1, 5), seed=seed)
+    assert sorted(sum(groups, [])) == list(range(M))
+    assert all(len(g) <= max(T, 3) for g in groups)
+
+
+@_settings
+@given(st.integers(0, 5))
+def test_flatten_roundtrip(seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (3, 4)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (7,))}}
+    flat = tree_flatten_concat(tree)
+    back = tree_unflatten_concat(flat, tree)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(tree),
+                      jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+
+
+@_settings
+@given(st.floats(1.0, 20.0), st.floats(1.0, 20.0))
+def test_noble_sigma_monotone_in_epsilon(e1, e2):
+    s1 = dp_lib.noble_sigma(e1, 1e-3)
+    s2 = dp_lib.noble_sigma(e2, 1e-3)
+    if e1 < e2:
+        assert s1 >= s2
+    else:
+        assert s2 >= s1
