@@ -1,6 +1,15 @@
-"""Kernel micro-benchmarks: interpret-mode Pallas vs pure-jnp oracle (CPU
-wall-time is NOT a TPU signal — recorded for regression tracking; correctness
-sweeps live in tests/test_kernels.py)."""
+"""Kernel micro-benchmarks: backend sweep (compiled pallas / interpret / ref
+/ dispatched) across shapes, with speedup ratios vs the jnp reference.
+
+CPU wall-time is NOT a TPU signal — it is recorded for regression tracking
+and to enforce the dispatch policy: the dispatched path must track the jnp
+reference on CPU (interpret-mode Pallas is never silently selected — it is
+benchmarked here explicitly so the gap stays visible). Correctness sweeps
+live in tests/test_kernels.py and tests/test_dispatch.py.
+
+``run()`` stashes machine-readable records in ``LAST_RECORDS`` which
+``benchmarks/run.py`` writes to BENCH_kernels.json at the repo root.
+"""
 from __future__ import annotations
 
 import time
@@ -8,31 +17,96 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dp_clip import ops as dp_ops, ref as dp_ref
-from repro.kernels.l1_distance import ops as l1_ops, ref as l1_ref
+from repro.config import KernelConfig
+from repro.kernels import dispatch
+
+# records from the most recent run(); benchmarks/run.py serializes them
+LAST_RECORDS: list = []
+
+_DP_SHAPES = {True: [(16, 8192), (32, 32768), (8, 131072)],
+              False: [(32, 8192), (64, 65536), (16, 262144)]}
+_L1_SHAPES = {True: [(16, 4096), (32, 16384), (8, 65536)],
+              False: [(32, 16384), (64, 65536), (16, 131072)]}
+
+# interpret mode above this element count takes minutes on CPU — skip
+_INTERPRET_ELEM_CAP = 4 << 20
 
 
 def _time(fn, *args, n=3):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))  # compile
+    best = float("inf")
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _backends():
+    """(label, KernelConfig) pairs to sweep; 'dispatch' is the auto policy."""
+    out = [("ref", KernelConfig(backend="ref")),
+           ("dispatch", KernelConfig(backend="auto"))]
+    if jax.default_backend() in dispatch._PALLAS_PLATFORMS:
+        out.insert(1, ("pallas", KernelConfig(backend="pallas")))
+    out.append(("interpret", KernelConfig(backend="interpret")))
+    return out
+
+
+def _sweep(kernel_name, shapes, make_args, call):
+    rows, recs = [], []
+    for shape in shapes:
+        args = make_args(shape)
+        ref_us = None
+        for label, cfg in _backends():
+            if (label == "interpret"
+                    and shape[0] * shape[1] > _INTERPRET_ELEM_CAP):
+                continue
+            resolved = dispatch.resolve_backend(cfg.backend)
+            us = _time(lambda *a: call(cfg, *a), *args)
+            if label == "ref":
+                ref_us = us
+            ratio = (us / ref_us) if ref_us else None
+            tag = f"{kernel_name}_{shape[0]}x{shape[1]}_{label}"
+            rows.append((f"kernel_{tag}_us", us,
+                         f"{ratio:.2f}x_ref" if ratio else shape[0] * shape[1]))
+            recs.append({"kernel": kernel_name, "shape": list(shape),
+                         "backend": label, "resolved": resolved, "us": us,
+                         "vs_ref": ratio})
+    return rows, recs
 
 
 def run(quick: bool = True):
-    rows = []
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (16, 8192))
-    rows.append(("kernel_dp_clip_pallas_us",
-                 _time(lambda a: dp_ops.clip_accumulate_flat(a, 1.0), x), 16 * 8192))
-    rows.append(("kernel_dp_clip_ref_us",
-                 _time(lambda a: dp_ref.clip_accumulate(a, 1.0), x), 16 * 8192))
-    w = jax.random.normal(key, (16, 4096))
-    rows.append(("kernel_l1_pallas_us", _time(l1_ops.pairwise_l1, w), 16 * 16))
-    rows.append(("kernel_l1_ref_us", _time(l1_ref.pairwise_l1, w), 16 * 16))
+    platform = jax.default_backend()
+
+    def dp_args(shape):
+        return (jax.random.normal(key, shape),)
+
+    def dp_call(cfg, x):
+        return dispatch.dp_clip_flat(x, 1.0, key, sigma=0.5, kernels=cfg)
+
+    def l1_args(shape):
+        return (jax.random.normal(key, shape),)
+
+    def l1_call(cfg, w):
+        return dispatch.pairwise_l1(w, kernels=cfg)
+
+    rows_dp, recs_dp = _sweep("dp_clip", _DP_SHAPES[quick], dp_args, dp_call)
+    rows_l1, recs_l1 = _sweep("l1_distance", _L1_SHAPES[quick], l1_args, l1_call)
+
+    rows = rows_dp + rows_l1
+    LAST_RECORDS.clear()
+    LAST_RECORDS.extend(recs_dp + recs_l1)
     for name, us, d in rows:
-        print(f"[kernels] {name} {us:.0f}us")
+        print(f"[kernels] {name} {us:.0f}us ({d})")
+
+    # dispatch-policy guard: on CPU the dispatched path resolves to the jnp
+    # reference, so its wall time must track ref (never interpret's)
+    worst = max((r["vs_ref"] for r in LAST_RECORDS
+                 if r["backend"] == "dispatch" and r["vs_ref"]), default=None)
+    if worst is not None:
+        print(f"[kernels] dispatched worst-case vs ref: {worst:.2f}x "
+              f"(platform={platform})")
     return rows
 
 

@@ -12,8 +12,16 @@ Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# make `python benchmarks/run.py` work without PYTHONPATH incantations
+for _p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -45,6 +53,15 @@ def main() -> None:
             print(f"[{name}] FAILED: {type(e).__name__}: {e}", file=sys.stderr)
             rows.append((f"{name}_FAILED", 0.0, type(e).__name__))
         print(f"===== {name} done in {time.time()-t0:.0f}s =====", flush=True)
+        if name == "kernels" and bench_kernels.LAST_RECORDS:
+            import jax
+            payload = {"platform": jax.default_backend(),
+                       "quick": quick,
+                       "entries": bench_kernels.LAST_RECORDS}
+            out_path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+            with open(out_path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"[kernels] wrote {out_path}", flush=True)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

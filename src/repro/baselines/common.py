@@ -30,14 +30,15 @@ def sgd_update(params, grads, lr: float):
 
 
 def client_grad(apply_fn, params, x, y, key, *, dp_cfg=None, sigma: float = 0.0,
-                use_pallas: bool = False):
+                kernels=None):
     """Gradient for one client, optionally DP (per-example clip + noise)."""
     loss = ce_loss(apply_fn)
     if dp_cfg is not None and dp_cfg.enabled and sigma > 0:
         return dp_lib.dp_gradients(loss, params, {"x": x, "y": y}, key,
                                    clip=dp_cfg.clip_norm, sigma=sigma,
                                    microbatches=dp_cfg.microbatches,
-                                   use_pallas=use_pallas)
+                                   per_example_chunk=dp_cfg.per_example_chunk,
+                                   kernels=kernels)
     return jax.grad(loss)(params, {"x": x, "y": y})
 
 

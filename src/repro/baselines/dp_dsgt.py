@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines import common
+from repro.config import DPConfig
 from repro.core import dp as dp_lib
 from repro.utils.pytree import global_norm
 
@@ -45,7 +46,7 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
     def grads(params, xs, ys, k):
         def one(p, x, y, kk):
             return common.client_grad(apply_fn, p, x, y, kk,
-                                      dp_cfg=_DP(clip), sigma=sigma if dp else 0.0)
+                                      dp_cfg=DPConfig(clip_norm=clip), sigma=sigma if dp else 0.0)
         return jax.vmap(one)(params, xs, ys, jax.random.split(k, M))
 
     xs0, ys0 = sample()
@@ -71,10 +72,3 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
             history.append((r, float(jnp.mean(acc))))
     return x_params, history, sigma
 
-
-class _DP:
-    enabled = True
-    microbatches = 0
-
-    def __init__(self, clip):
-        self.clip_norm = clip

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines import common
+from repro.config import DPConfig
 from repro.core import dp as dp_lib
 
 
@@ -36,7 +37,7 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
             def body(pp, i):
                 g = common.client_grad(
                     apply_fn, pp, x, y, jax.random.fold_in(k, i),
-                    dp_cfg=_DP(clip), sigma=sigma)
+                    dp_cfg=DPConfig(clip_norm=clip), sigma=sigma)
                 return common.sgd_update(pp, g, lr), None
             p2, _ = jax.lax.scan(body, p, jnp.arange(local_steps))
             return p2
@@ -63,10 +64,3 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
             history.append((r, float(jnp.mean(acc))))
     return global_params, history, sigma
 
-
-class _DP:
-    enabled = True
-    microbatches = 0
-
-    def __init__(self, clip):
-        self.clip_norm = clip

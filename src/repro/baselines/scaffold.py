@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines import common
+from repro.config import DPConfig
 from repro.core import dp as dp_lib
 
 
@@ -35,7 +36,7 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
         def one(p0, ci, x, y, k):
             def body(pp, i):
                 g = common.client_grad(apply_fn, pp, x, y, jax.random.fold_in(k, i),
-                                       dp_cfg=_DP(clip), sigma=sigma)
+                                       dp_cfg=DPConfig(clip_norm=clip), sigma=sigma)
                 # SCAFFOLD drift correction: g - c_i + c
                 corr = jax.tree_util.tree_map(lambda gg, cc, cg: gg - cc + cg,
                                               g, ci, c_global)
@@ -65,10 +66,3 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
             history.append((r, float(jnp.mean(acc))))
     return gp, history, sigma
 
-
-class _DP:
-    enabled = True
-    microbatches = 0
-
-    def __init__(self, clip):
-        self.clip_norm = clip

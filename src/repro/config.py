@@ -6,6 +6,7 @@ Everything a run needs is described by frozen dataclasses:
   DPConfig     — differential-privacy knobs (paper Eqs. 10–12)
   P4Config     — the paper's technique: grouping + proxy/private co-training
   MeshConfig   — device mesh (single-pod / multi-pod)
+  KernelConfig — Pallas/jnp kernel backend selection + autotuning
   TrainConfig  — optimizer/schedule/steps
   RunConfig    — the composed top-level config consumed by launch scripts
 
@@ -135,6 +136,9 @@ class DPConfig:
     local_steps: int = 1            # K — local steps between exchanges
     rounds: int = 100               # T — paper fixes T=100 communication rounds
     microbatches: int = 0           # 0 => exact per-example (vmap); k => scan over k
+    # 0 => one vmap over the whole batch (B× parameter memory); c => scan over
+    # B/c chunks of c vmapped examples — same per-example semantics, c× memory
+    per_example_chunk: int = 0
     noise_router: bool = True       # MoE ablation knob (see DESIGN §4)
 
 
@@ -154,6 +158,23 @@ class P4Config:
     aggregator_rotation: int = 1    # rounds between rotating the group aggregator
     handcrafted_features: bool = True  # ScatterNet frontend (ablation knob)
     manual_pod: bool = False        # shard_map the pod axis (XLA-version gated)
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Kernel backend selection + autotuning (repro.kernels.dispatch).
+
+    Replaces the old bare ``use_pallas: bool``: backend choice is a policy
+    (compiled Pallas on TPU, jnp reference on CPU, interpreter only for
+    explicit debugging), and tile sizes are autotuned per (shape, dtype,
+    backend) rather than hardcoded.
+    """
+    backend: str = "auto"           # auto | pallas | interpret | ref
+    autotune: bool = True           # tile-size search on first (shape, dtype)
+    autotune_trials: int = 2        # timed repetitions per candidate
+    # explicit tile overrides; (0, 0) => autotune (or kernel defaults)
+    dp_clip_tile: Tuple[int, int] = (0, 0)    # (tb, td)
+    l1_tile: Tuple[int, int] = (0, 0)         # (tm, td)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +240,7 @@ class RunConfig:
     train: TrainConfig = field(default_factory=TrainConfig)
     dp: DPConfig = field(default_factory=DPConfig)
     p4: P4Config = field(default_factory=P4Config)
-    use_pallas: bool = False        # TPU kernels (validated interpret-mode on CPU)
+    kernels: KernelConfig = field(default_factory=KernelConfig)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,13 @@
 * ``rdp_epsilon`` / ``calibrate_sigma`` — Rényi-DP accountant for the
   subsampled Gaussian mechanism (Mironov 2017), used by the FedAvg/Scaffold
   baselines exactly as the paper describes (§4.2.1).
-* ``dp_gradients`` — per-example (vmap) or microbatch (lax.scan) clipped +
-  noised gradients. Per-example is the paper-faithful path; microbatch is the
-  LM-scale realization (DESIGN.md §2). The flat clip-scale-accumulate hot
-  loop has a Pallas kernel (repro.kernels.dp_clip) selected by use_pallas.
+* ``dp_gradients`` — per-example (vmap, optionally chunked) or microbatch
+  (lax.scan) clipped + noised gradients. Per-example is the paper-faithful
+  path; microbatch is the LM-scale realization (DESIGN.md §2). The flat
+  clip-scale-accumulate hot loop goes through ``repro.kernels.dispatch``
+  (compiled Pallas on TPU, jnp reference on CPU, tile autotuning) as a fused
+  pipeline that reads the (B, D) per-example matrix at most twice and draws
+  the Eq. 11 noise once on the flat (D,) buffer.
 """
 from __future__ import annotations
 
@@ -21,7 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.pytree import global_norm
+from repro.config import KernelConfig
+from repro.utils.pytree import (global_norm, param_count, tree_flatten_concat,
+                                tree_unflatten_concat)
 
 
 # ---------------------------------------------------------------------------
@@ -40,11 +45,18 @@ def clip_by_global_norm(tree, clip: float):
 # ---------------------------------------------------------------------------
 
 def add_noise(tree, key, sigma: float, clip: float, denom: float):
-    """H̃ = mean(g̃) + (2C/denom)·N(0, σ²)  (paper Eq. 11, denom = s·R)."""
+    """H̃ = mean(g̃) + (2C/denom)·N(0, σ²)  (paper Eq. 11, denom = s·R).
+
+    Per-leaf draws, deliberately: this serves the microbatch LM-scale path,
+    where leaves are sharded model-parameter-sized arrays — flattening the
+    tree into one (D,) vector would materialize an extra fp32 copy of the
+    model and force a cross-shard gather. The per-example path noises on its
+    already-flat buffer instead (repro.kernels.dispatch.dp_clip_flat)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     noised = [
-        g + (2.0 * clip / denom) * sigma * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+        g + (2.0 * clip / denom) * sigma
+        * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
         for g, k in zip(leaves, keys)
     ]
     return jax.tree_util.tree_unflatten(treedef, noised)
@@ -127,54 +139,84 @@ def calibrate_sigma(target_eps: float, delta: float, q: float, steps: int,
 # DP gradients — per-example (paper-faithful) and microbatch (LM-scale)
 # ---------------------------------------------------------------------------
 
+def _per_example_grad_fn(loss_fn: Callable):
+    def one(p, ex):
+        ex = jax.tree_util.tree_map(lambda t: t[None], ex)
+        return jax.grad(loss_fn)(p, ex)
+    return one
+
+
 def dp_gradients(loss_fn: Callable, params, batch, key, *, clip: float,
-                 sigma: float, microbatches: int = 0, use_pallas: bool = False):
+                 sigma: float, microbatches: int = 0,
+                 per_example_chunk: int = 0,
+                 kernels: Optional[KernelConfig] = None):
     """Clipped + noised gradient of ``loss_fn(params, batch) -> scalar``.
 
     microbatches == 0 — exact per-example DP-SGD: vmap the gradient over the
-    leading batch axis, clip each example's gradient (Eq. 10), average, noise
-    (Eq. 11).
+    leading batch axis, then the fused dispatch pipeline (Eqs. 10–11):
+    flatten→norm→scale→accumulate→noise, reading the (B, D) per-example
+    matrix at most twice and drawing noise once on the flat (D,) buffer.
+    ``per_example_chunk = c`` (c must divide B) scans B/c chunks of c
+    vmapped examples into a flat (D,) accumulator — identical semantics, but
+    peak memory is c× the parameter size instead of B×, so batch size is no
+    longer capped by the per-example gradient stack.
 
     microbatches == k — LM-scale approximation: split the batch into k
     microbatches (lax.scan), clip each microbatch-mean gradient, average,
     noise. Exact per-example grads on a 72B model are memory-infeasible; this
     is the standard large-scale DP realization (DESIGN.md §2).
+
+    ``kernels`` selects the kernel backend (repro.kernels.dispatch); None
+    uses the default policy (compiled Pallas on TPU, jnp reference on CPU).
     """
+    from repro.kernels import dispatch
     n = jax.tree_util.tree_leaves(batch)[0].shape[0]
 
     if microbatches == 0:
-        def one(p, ex):
-            ex = jax.tree_util.tree_map(lambda t: t[None], ex)
-            return jax.grad(loss_fn)(p, ex)
+        one = _per_example_grad_fn(loss_fn)
+        c = per_example_chunk
+        if c:
+            # c must divide B (c == B degenerates to the full vmap below);
+            # silently ignoring a bad chunk size would fall back to B× memory
+            assert c <= n and n % c == 0, (n, c)
+        if c and c < n:
+            # chunked-vmap: per-example clipping is independent across
+            # examples, so chunk clip-sums add exactly
+            from repro.kernels.dp_clip.ref import add_flat_noise
+            chunks = jax.tree_util.tree_map(
+                lambda t: t.reshape((n // c, c) + t.shape[1:]), batch)
+
+            def body(acc, bchunk):
+                per_ex = jax.vmap(one, in_axes=(None, 0))(params, bchunk)
+                flat = jax.vmap(tree_flatten_concat)(per_ex)     # (c, D)
+                # denom folded into the per-example scales: chunk sums are
+                # already /n, so their total is the mean — no extra (D,) pass
+                return acc + dispatch.clip_accumulate(flat, clip,
+                                                      denom=float(n),
+                                                      kernels=kernels), None
+
+            D = param_count(params)
+            mean, _ = jax.lax.scan(body, jnp.zeros((D,), jnp.float32), chunks)
+            out = add_flat_noise(mean, key, sigma, clip, float(n))
+            return tree_unflatten_concat(out, params)
         per_ex = jax.vmap(one, in_axes=(None, 0))(params, batch)
-        if use_pallas:
-            from repro.kernels.dp_clip import ops as dp_ops
-            summed = dp_ops.clip_accumulate_tree(per_ex, clip)
-            clipped_mean = jax.tree_util.tree_map(lambda s: s / n, summed)
-        else:
-            norms = jax.vmap(global_norm)(per_ex)                # (n,)
-            scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
-            def scale_mean(g):
-                return jnp.mean(g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), axis=0)
-            clipped_mean = jax.tree_util.tree_map(scale_mean, per_ex)
-        denom = float(n)
-    else:
-        k = microbatches
-        assert n % k == 0, (n, k)
-        from repro.sharding.rules import shard_act
-        mb = jax.tree_util.tree_map(
-            lambda t: shard_act(t.reshape((k, n // k) + t.shape[1:]),
-                                (None, "batch") + (None,) * (t.ndim - 1)),
-            batch)
+        return dispatch.dp_clip(per_ex, clip, key, sigma=sigma,
+                                denom=float(n), kernels=kernels)
 
-        def body(acc, mbatch):
-            g = jax.grad(loss_fn)(params, mbatch)
-            g, _ = clip_by_global_norm(g, clip)
-            return jax.tree_util.tree_map(lambda a, b: a + b, acc, g), None
+    k = microbatches
+    assert n % k == 0, (n, k)
+    from repro.sharding.rules import shard_act
+    mb = jax.tree_util.tree_map(
+        lambda t: shard_act(t.reshape((k, n // k) + t.shape[1:]),
+                            (None, "batch") + (None,) * (t.ndim - 1)),
+        batch)
 
-        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
-        summed, _ = jax.lax.scan(body, zeros, mb)
-        clipped_mean = jax.tree_util.tree_map(lambda s: s / k, summed)
-        denom = float(k)
+    def body(acc, mbatch):
+        g = jax.grad(loss_fn)(params, mbatch)
+        g, _ = clip_by_global_norm(g, clip)
+        return jax.tree_util.tree_map(lambda a, b: a + b, acc, g), None
 
-    return add_noise(clipped_mean, key, sigma, clip, denom)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    summed, _ = jax.lax.scan(body, zeros, mb)
+    clipped_mean = jax.tree_util.tree_map(lambda s: s / k, summed)
+    return add_noise(clipped_mean, key, sigma, clip, float(k))

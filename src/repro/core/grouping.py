@@ -12,17 +12,18 @@ The greedy decentralized procedure (verbatim from the paper):
      pairs, i.e. max similarity) using only similarities their members
      already computed, and merge greedily until |g| = T.
 
-The M×M distance computation is the Pallas ``l1_distance`` kernel's job on
-TPU; here it is also available as pure JAX (kernel-validated against it).
+The M×M distance computation goes through ``repro.kernels.dispatch``
+(symmetry-aware Pallas kernel on TPU, blocked pure-jnp reference on CPU).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import KernelConfig
 from repro.utils.pytree import tree_flatten_concat
 
 
@@ -31,15 +32,11 @@ def flatten_clients(stacked_params) -> jnp.ndarray:
     return jax.vmap(tree_flatten_concat)(stacked_params)
 
 
-def pairwise_l1(weights: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
-    """weights: (M, D) -> (M, M) ℓ1 distances (Eq. 3)."""
-    if use_pallas:
-        from repro.kernels.l1_distance import ops as l1_ops
-        return l1_ops.pairwise_l1(weights)
-    # blocked to avoid (M, M, D) materialization
-    def row(w):
-        return jnp.sum(jnp.abs(weights - w[None, :]), axis=-1)
-    return jax.lax.map(row, weights)
+def pairwise_l1(weights: jnp.ndarray,
+                kernels: Optional[KernelConfig] = None) -> jnp.ndarray:
+    """weights: (M, D) -> (M, M) ℓ1 distances (Eq. 3), backend-dispatched."""
+    from repro.kernels import dispatch
+    return dispatch.pairwise_l1(weights, kernels=kernels)
 
 
 def greedy_group_formation(dist: np.ndarray, group_size: int,

@@ -106,7 +106,8 @@ class P4Trainer:
                 proxy_obj, proxy, {"x": x, "y": y}, key,
                 clip=dpc.clip_norm, sigma=self.sigma,
                 microbatches=dpc.microbatches,
-                use_pallas=self.cfg.use_pallas)
+                per_example_chunk=dpc.per_example_chunk,
+                kernels=self.cfg.kernels)
         else:
             g_prox = jax.grad(lambda w: proxy_obj(w, {"x": x, "y": y}))(proxy)
 
@@ -158,7 +159,7 @@ class P4Trainer:
         if p4c.similarity == "random":
             return random_groups(M, p4c.group_size, seed)
         weights = flatten_clients(states["proxy"])
-        dist = np.asarray(pairwise_l1(weights, use_pallas=self.cfg.use_pallas))
+        dist = np.asarray(pairwise_l1(weights, kernels=self.cfg.kernels))
         return greedy_group_formation(dist, p4c.group_size,
                                       p4c.sample_peers, seed)
 

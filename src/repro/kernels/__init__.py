@@ -6,6 +6,8 @@
   flash_attention  — blocked online-softmax attention (prefill at 32k/500k)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper), ref.py (pure-jnp oracle). On this CPU container all kernels run in
-interpret mode; on TPU set interpret=False (RunConfig.use_pallas).
+wrapper), ref.py (pure-jnp oracle). Backend selection and tile autotuning
+live in ``dispatch.py`` (``RunConfig.kernels``): compiled Pallas on TPU, the
+jnp reference on CPU, and the interpreter only when explicitly requested for
+debugging.
 """

@@ -1,0 +1,227 @@
+"""Kernel backend dispatch + tile-size autotuning — the single entry point
+through which the framework reaches its compute kernels.
+
+Selection policy (replaces the old bare ``use_pallas: bool``):
+
+  * ``auto``      — compiled Pallas on TPU, pure-jnp reference elsewhere.
+                    The Pallas interpreter is NEVER chosen automatically: it
+                    is strictly slower than the jnp oracle it validates.
+  * ``pallas``    — compiled Pallas; raises on platforms without Mosaic
+                    support rather than silently degrading.
+  * ``interpret`` — Pallas interpreter, for explicit kernel debugging only.
+  * ``ref``       — the pure-jnp oracle.
+
+Tile sizes are autotuned on first use and cached per
+``(kernel, shape, dtype, backend)``; explicit tiles in ``KernelConfig``
+bypass the tuner. The cache is process-global — every jit trace after the
+first hits it, so tracing inside vmap/scan pays the search exactly once.
+
+Fused DP-SGD entry points (paper Eqs. 10–11 hot loop): ``dp_clip`` /
+``dp_clip_flat`` fuse flatten→norm→scale→accumulate→noise so the (B, D)
+per-example gradient matrix is read at most twice (one norm pass, one
+scale-accumulate pass with the 1/denom mean folded into the scales) and the
+Gaussian noise is a single (D,) draw on the flat output buffer — no
+per-leaf noise loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import KernelConfig
+from repro.kernels.dp_clip import kernel as dp_kernel, ops as dp_ops, ref as dp_ref
+from repro.kernels.l1_distance import kernel as l1_kernel, ops as l1_ops, ref as l1_ref
+from repro.utils.pytree import tree_flatten_concat, tree_unflatten_concat
+
+# Platforms with a Pallas compile path (Mosaic). GPU/Triton is untested in
+# this repo, so it is deliberately NOT auto-selected.
+_PALLAS_PLATFORMS = ("tpu",)
+
+_BACKENDS = ("auto", "pallas", "interpret", "ref")
+
+
+def resolve_backend(requested: str = "auto", platform: Optional[str] = None) -> str:
+    """Map a requested backend to a concrete one ("pallas"|"interpret"|"ref").
+
+    ``interpret`` is only ever returned when explicitly requested."""
+    if requested not in _BACKENDS:
+        raise ValueError(f"unknown kernel backend {requested!r}; "
+                         f"expected one of {_BACKENDS}")
+    platform = platform or jax.default_backend()
+    if requested == "auto":
+        return "pallas" if platform in _PALLAS_PLATFORMS else "ref"
+    if requested == "pallas" and platform not in _PALLAS_PLATFORMS:
+        raise ValueError(
+            f"backend='pallas' requires one of {_PALLAS_PLATFORMS}, got "
+            f"{platform!r}; use backend='interpret' for explicit debugging "
+            f"or 'auto'/'ref' for the jnp reference")
+    return requested
+
+
+# ---------------------------------------------------------------------------
+# Autotuner — cached per (kernel, shape, dtype, backend)
+# ---------------------------------------------------------------------------
+
+_TuneKey = Tuple[str, Tuple[int, ...], str, str]
+_TUNE_CACHE: Dict[_TuneKey, Tuple[int, ...]] = {}
+_TUNE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_autotune_cache() -> None:
+    _TUNE_CACHE.clear()
+    _TUNE_STATS["hits"] = _TUNE_STATS["misses"] = 0
+
+
+def autotune_cache_stats() -> Dict[str, int]:
+    return dict(_TUNE_STATS, entries=len(_TUNE_CACHE))
+
+
+def autotune(kernel_name: str, shape: Sequence[int], dtype, backend: str,
+             candidates: Sequence[Tuple[int, ...]],
+             time_fn: Callable[[Tuple[int, ...]], float],
+             trials: int = 2) -> Tuple[int, ...]:
+    """Pick the fastest candidate tiling for ``kernel_name`` on ``shape``.
+
+    ``time_fn(candidate) -> seconds`` runs one timed call; candidates that
+    raise are skipped. The winner is memoized per (kernel, shape, dtype,
+    backend) so repeated traces (vmap/scan/re-jit) never re-search."""
+    key: _TuneKey = (kernel_name, tuple(int(s) for s in shape),
+                     jnp.dtype(dtype).name, backend)
+    if key in _TUNE_CACHE:
+        _TUNE_STATS["hits"] += 1
+        return _TUNE_CACHE[key]
+    _TUNE_STATS["misses"] += 1
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        try:
+            t = min(float(time_fn(cand)) for _ in range(max(1, trials)))
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = tuple(cand), t
+    if best is None:
+        best = tuple(candidates[0])
+    _TUNE_CACHE[key] = best
+    return best
+
+
+def _timed(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))  # compile / warm up
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def _dp_clip_candidates(B: int, D: int):
+    tbs = [tb for tb in (8, 16, 32) if tb <= max(8, B)]
+    tds = [td for td in (2048, 8192, 16384) if td <= max(2048, D)]
+    return [(tb, td) for tb in tbs for td in tds] or [(8, 2048)]
+
+
+def _l1_candidates(M: int, D: int):
+    tms = [tm for tm in (8, 16) if tm <= max(8, M)]
+    tds = [td for td in (2048, 8192) if td <= max(2048, D)]
+    return [(tm, td) for tm in tms for td in tds] or [(8, 2048)]
+
+
+def dp_clip_tiles(shape: Tuple[int, int], dtype, cfg: KernelConfig,
+                  backend: str) -> Tuple[int, int]:
+    if cfg.dp_clip_tile != (0, 0):
+        return cfg.dp_clip_tile
+    if backend != "pallas" or not cfg.autotune:
+        return (dp_kernel.DEFAULT_TB, dp_kernel.DEFAULT_TD)
+    B, D = shape
+
+    def time_fn(cand):
+        tb, td = cand
+        x = jnp.zeros(shape, dtype)
+        return _timed(lambda a: dp_ops.clip_accumulate_flat(
+            a, 1.0, interpret=False, tb=tb, td=td), x)
+
+    return autotune("dp_clip", shape, dtype, backend,
+                    _dp_clip_candidates(B, D), time_fn,
+                    trials=cfg.autotune_trials)
+
+
+def l1_tiles(shape: Tuple[int, int], dtype, cfg: KernelConfig,
+             backend: str) -> Tuple[int, int]:
+    if cfg.l1_tile != (0, 0):
+        return cfg.l1_tile
+    if backend != "pallas" or not cfg.autotune:
+        return (l1_kernel.DEFAULT_TM, l1_kernel.DEFAULT_TD)
+    M, D = shape
+
+    def time_fn(cand):
+        tm, td = cand
+        x = jnp.zeros(shape, dtype)
+        return _timed(lambda a: l1_ops.pairwise_l1(
+            a, interpret=False, tm=tm, td=td), x)
+
+    return autotune("l1_distance", shape, dtype, backend,
+                    _l1_candidates(M, D), time_fn,
+                    trials=cfg.autotune_trials)
+
+
+# ---------------------------------------------------------------------------
+# Dispatched kernel entry points
+# ---------------------------------------------------------------------------
+
+def _cfg(kernels: Optional[KernelConfig]) -> KernelConfig:
+    return kernels if kernels is not None else KernelConfig()
+
+
+def clip_accumulate(flat, clip: float, *, denom: float = 1.0,
+                    kernels: Optional[KernelConfig] = None):
+    """flat: (B, D) per-example grads -> Σ_b clipped(g_b)/denom (D,) fp32.
+
+    Reads (B, D) at most twice on every backend (norm pass +
+    scale-accumulate pass with the mean folded into the scales)."""
+    cfg = _cfg(kernels)
+    backend = resolve_backend(cfg.backend)
+    if backend == "ref":
+        return dp_ref.clip_accumulate(flat, clip, denom=denom)
+    tb, td = dp_clip_tiles(tuple(flat.shape), flat.dtype, cfg, backend)
+    return dp_ops.clip_accumulate_flat(flat, clip, denom=denom,
+                                       interpret=(backend == "interpret"),
+                                       tb=tb, td=td)
+
+
+def dp_clip_flat(flat, clip: float, key=None, *, sigma: float = 0.0,
+                 denom: float = 1.0, kernels: Optional[KernelConfig] = None):
+    """Fused DP-SGD numerator on a flat (B, D) matrix: clipped mean plus the
+    Eq. 11 Gaussian drawn once on the (D,) output buffer. The draw is
+    identical across backends (same key -> bit-equal noise); sigma > 0
+    without a key raises."""
+    out = clip_accumulate(flat, clip, denom=denom, kernels=kernels)
+    return dp_ref.add_flat_noise(out, key, sigma, clip, denom)
+
+
+def dp_clip(per_example_grads, clip: float, key=None, *, sigma: float = 0.0,
+            denom: Optional[float] = None,
+            kernels: Optional[KernelConfig] = None):
+    """Fused flatten→norm→scale→accumulate→noise over a per-example gradient
+    pytree (leading example dim B on every leaf) -> noised mean pytree.
+
+    The (B, D) matrix is materialized once by the flatten and then read at
+    most twice; noise is one flat (D,) draw, killing the per-leaf loop."""
+    flat = jax.vmap(tree_flatten_concat)(per_example_grads)      # (B, D)
+    if denom is None:
+        denom = float(flat.shape[0])
+    out = dp_clip_flat(flat, clip, key, sigma=sigma, denom=denom,
+                       kernels=kernels)
+    template = jax.tree_util.tree_map(lambda g: g[0], per_example_grads)
+    return tree_unflatten_concat(out, template)
+
+
+def pairwise_l1(weights, kernels: Optional[KernelConfig] = None):
+    """weights: (M, D) -> (M, M) ℓ1 distances (paper Eq. 3)."""
+    cfg = _cfg(kernels)
+    backend = resolve_backend(cfg.backend)
+    if backend == "ref":
+        return l1_ref.pairwise_l1(weights)
+    tm, td = l1_tiles(tuple(weights.shape), weights.dtype, cfg, backend)
+    return l1_ops.pairwise_l1(weights, interpret=(backend == "interpret"),
+                              tm=tm, td=td)

@@ -1,7 +1,9 @@
 """jit'd wrappers: per-example clipped-gradient accumulation over pytrees.
 
 Pads (B, D) to tile multiples, runs the two Pallas passes, and maps the flat
-result back onto the gradient pytree.
+result back onto the gradient pytree. Backend/tile selection lives in
+``repro.kernels.dispatch``; these wrappers take explicit ``interpret`` /
+tile arguments (interpret defaults to True so direct CPU use keeps working).
 """
 from __future__ import annotations
 
@@ -22,15 +24,18 @@ def _pad_to(x, mb, md):
     return x
 
 
-def clip_accumulate_flat(x, clip: float, interpret: bool = True,
-                         tb: int = 8, td: int = 16384):
-    """x: (B, D) per-example flat grads -> Σ_b clipped(g_b) (D,)."""
+def clip_accumulate_flat(x, clip: float, denom: float = 1.0,
+                         interpret: bool = True, tb: int = 8, td: int = 16384):
+    """x: (B, D) per-example flat grads -> Σ_b clipped(g_b)/denom (D,).
+
+    Two passes over (B, D): a norm pass and a scale-accumulate pass; the
+    /denom mean is folded into the per-example scales."""
     B, D = x.shape
     td = min(td, max(128, D))
     xp = _pad_to(x, tb, td)
     sq = kernel.sq_norms(xp, tb=tb, td=td, interpret=interpret)[:B]
     norms = jnp.sqrt(sq)
-    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12)) / denom
     scales = jnp.pad(scales, (0, xp.shape[0] - B))
     out = kernel.scale_accumulate(xp, scales, tb=tb, td=td, interpret=interpret)
     return out[:D]

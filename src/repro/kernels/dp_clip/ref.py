@@ -1,6 +1,15 @@
-"""Pure-jnp oracle for the dp_clip kernels."""
+"""Pure-jnp oracle for the dp_clip kernels.
+
+``dp_clip_reference`` is the fused DP-SGD reference the dispatch layer's
+"ref" backend executes verbatim: the (B, D) per-example matrix is read
+exactly twice (norm pass, scale-accumulate pass) and the Gaussian noise is a
+single (D,) draw on the flat buffer — no per-leaf noise loop.
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 
@@ -12,8 +21,34 @@ def scale_accumulate(x, scales):
     return jnp.einsum("bd,b->d", x.astype(jnp.float32), scales.astype(jnp.float32))
 
 
-def clip_accumulate(x, clip: float):
-    """Full fused reference: Σ_b clip(g_b) with per-example l2 clipping."""
-    norms = jnp.sqrt(sq_norms(x))
-    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
-    return scale_accumulate(x, scales)
+def clip_accumulate(x, clip: float, denom: float = 1.0):
+    """Σ_b clip(g_b)/denom with per-example l2 clipping; the /denom mean is
+    folded into the per-example scales (one multiply, no extra (D,) pass)."""
+    norms = jnp.sqrt(sq_norms(x))                       # read 1 of (B, D)
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12)) / denom
+    return scale_accumulate(x, scales)                  # read 2 of (B, D)
+
+
+def add_flat_noise(out, key, sigma: float, clip: float, denom: float):
+    """Eq. 11 noise on a flat buffer: out + (2C/denom)·σ·N(0, 1).
+
+    THE canonical noise expression — every backend and the chunked path call
+    this one helper, which is what makes the same-key draw bit-identical
+    across them. sigma > 0 without a key is a silent privacy violation, so
+    it raises."""
+    if not sigma:
+        return out
+    if key is None:
+        raise ValueError("sigma > 0 requires a PRNG key (refusing to return "
+                         "unnoised gradients from a DP path)")
+    return out + (2.0 * clip / denom) * sigma * jax.random.normal(
+        key, out.shape, jnp.float32)
+
+
+def dp_clip_reference(x, clip: float, key=None, *, sigma: float = 0.0,
+                      denom: float = 1.0):
+    """Fused flatten→norm→scale→accumulate→noise semantics on a flat (B, D)
+    matrix: mean of clipped per-example gradients plus Eq. 11 noise drawn
+    once on the (D,) output buffer."""
+    return add_flat_noise(clip_accumulate(x, clip, denom=denom),
+                          key, sigma, clip, denom)

@@ -1,0 +1,255 @@
+"""Kernel dispatch layer + fused DP-SGD pipeline (ISSUE 1 tentpole).
+
+Covers: backend resolution policy (interpret never auto-selected), the
+autotuner cache, bit-equivalence of the fused dp_clip path vs the pure-jnp
+reference under a fixed PRNG key, the chunked-vmap per-example gradient
+path, and symmetry/zero-diagonal of the triangular l1 kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DPConfig, KernelConfig
+from repro.core import dp as dp_lib
+from repro.kernels import dispatch
+from repro.kernels.dp_clip import ref as dp_ref
+from repro.kernels.l1_distance import kernel as l1_kernel, ops as l1_ops, ref as l1_ref
+from repro.utils.pytree import global_norm, tree_flatten_concat
+
+
+# ---------------------------------------------------------------------------
+# backend resolution policy
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_policy():
+    # auto: compiled pallas on TPU, ref elsewhere — NEVER interpret
+    assert dispatch.resolve_backend("auto", platform="tpu") == "pallas"
+    assert dispatch.resolve_backend("auto", platform="cpu") == "ref"
+    assert dispatch.resolve_backend("auto", platform="gpu") == "ref"
+    for plat in ("cpu", "tpu", "gpu"):
+        assert dispatch.resolve_backend("auto", platform=plat) != "interpret"
+    # interpret only when explicitly requested
+    assert dispatch.resolve_backend("interpret", platform="cpu") == "interpret"
+    assert dispatch.resolve_backend("ref", platform="tpu") == "ref"
+    # explicit pallas on an unsupported platform is an error, not a fallback
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("pallas", platform="cpu")
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("nonsense")
+
+
+# ---------------------------------------------------------------------------
+# autotuner cache
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_hit():
+    dispatch.clear_autotune_cache()
+    calls = []
+
+    def time_fn(cand):
+        calls.append(cand)
+        return {(8, 2048): 3.0, (16, 2048): 1.0, (8, 4096): 2.0}[cand]
+
+    cands = [(8, 2048), (16, 2048), (8, 4096)]
+    got = dispatch.autotune("dp_clip", (64, 4096), jnp.float32, "pallas",
+                            cands, time_fn, trials=1)
+    assert got == (16, 2048)                    # fastest candidate wins
+    n_first = len(calls)
+    assert n_first == len(cands)
+    # second call: cache hit, no timing
+    again = dispatch.autotune("dp_clip", (64, 4096), jnp.float32, "pallas",
+                              cands, time_fn, trials=1)
+    assert again == got and len(calls) == n_first
+    assert dispatch.autotune_cache_stats()["hits"] == 1
+    # different shape/dtype/backend => new search
+    dispatch.autotune("dp_clip", (128, 4096), jnp.float32, "pallas",
+                      cands, time_fn, trials=1)
+    assert len(calls) == 2 * n_first
+    assert dispatch.autotune_cache_stats()["entries"] == 2
+
+
+def test_autotune_skips_failing_candidates():
+    dispatch.clear_autotune_cache()
+
+    def time_fn(cand):
+        if cand == (8, 2048):
+            raise RuntimeError("unsupported tile")
+        return 1.0
+
+    got = dispatch.autotune("l1_distance", (8, 8192), jnp.float32, "pallas",
+                            [(8, 2048), (16, 2048)], time_fn, trials=1)
+    assert got == (16, 2048)
+
+
+def test_explicit_tile_override_bypasses_autotune():
+    cfg = KernelConfig(dp_clip_tile=(4, 512), l1_tile=(4, 256))
+    assert dispatch.dp_clip_tiles((16, 1024), jnp.float32, cfg, "pallas") == (4, 512)
+    assert dispatch.l1_tiles((16, 1024), jnp.float32, cfg, "pallas") == (4, 256)
+
+
+# ---------------------------------------------------------------------------
+# fused dp_clip: bit-equivalence vs the jnp reference with a fixed key
+# ---------------------------------------------------------------------------
+
+def test_dp_clip_flat_bit_equivalent_to_reference(key):
+    """Dispatch policy on CPU: the dispatched fused path IS the jnp
+    reference, bit for bit (auto must resolve to ref, never interpret)."""
+    B, D = 12, 513
+    x = jax.random.normal(key, (B, D)) * 3
+    nk = jax.random.fold_in(key, 1)
+    got = dispatch.dp_clip_flat(x, 0.7, nk, sigma=1.3, denom=float(B),
+                                kernels=KernelConfig(backend="auto"))
+    want = dp_ref.dp_clip_reference(x, 0.7, nk, sigma=1.3, denom=float(B))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dp_clip_noise_draw_bit_identical_across_backends(key):
+    """The Eq. 11 draw goes through one canonical helper, so with the same
+    key the noise added by the kernel (interpret) path is bit-identical to
+    adding the helper's draw onto the kernel's noiseless output."""
+    B, D = 8, 384
+    x = jax.random.normal(key, (B, D)) * 2
+    nk = jax.random.fold_in(key, 1)
+    cfg = KernelConfig(backend="interpret", dp_clip_tile=(4, 128))
+    noiseless = dispatch.dp_clip_flat(x, 0.9, denom=float(B), kernels=cfg)
+    noised = dispatch.dp_clip_flat(x, 0.9, nk, sigma=1.3, denom=float(B),
+                                   kernels=cfg)
+    want = dp_ref.add_flat_noise(noiseless, nk, 1.3, 0.9, float(B))
+    assert np.array_equal(np.asarray(noised), np.asarray(want))
+
+
+def test_dp_clip_sigma_without_key_raises(key):
+    """sigma > 0 with no PRNG key must not silently skip the privacy noise."""
+    x = jax.random.normal(key, (4, 64))
+    with pytest.raises(ValueError, match="PRNG key"):
+        dispatch.dp_clip_flat(x, 1.0, sigma=0.5)
+    tree = {"w": jax.random.normal(key, (4, 3))}
+    with pytest.raises(ValueError, match="PRNG key"):
+        dispatch.dp_clip(tree, 1.0, sigma=0.5)
+
+
+def test_per_example_chunk_must_divide_batch(key):
+    params = {"w": jax.random.normal(key, (3, 2))}
+    batch = {"x": jax.random.normal(key, (10, 3)),
+             "y": jax.random.normal(key, (10, 2))}
+    with pytest.raises(AssertionError):
+        dp_lib.dp_gradients(_quad_loss, params, batch, key, clip=0.3,
+                            sigma=0.0, per_example_chunk=4)   # 10 % 4 != 0
+    with pytest.raises(AssertionError):
+        dp_lib.dp_gradients(_quad_loss, params, batch, key, clip=0.3,
+                            sigma=0.0, per_example_chunk=16)  # c > B
+    # c == B degenerates cleanly to the full vmap path
+    g = dp_lib.dp_gradients(_quad_loss, params, batch, key, clip=0.3,
+                            sigma=0.0, per_example_chunk=10)
+    assert np.isfinite(np.asarray(g["w"])).all()
+
+
+def test_dp_clip_tree_matches_unfused_semantics(key):
+    """Fused pipeline == per-example clip (Eq. 10) -> mean, without noise."""
+    tree = {"w": jax.random.normal(key, (6, 10, 3)) * 5,
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 7))}
+    clip = 0.5
+    got = dispatch.dp_clip(tree, clip)          # no key => no noise
+    norms = jax.vmap(global_norm)(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    want = jax.tree_util.tree_map(
+        lambda g: jnp.mean(g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), axis=0),
+        tree)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_dp_clip_interpret_backend_matches_ref(key):
+    """Explicit interpret backend: kernel output ≈ ref, noise bit-identical."""
+    B, D = 8, 384
+    x = jax.random.normal(key, (B, D)) * 2
+    nk = jax.random.fold_in(key, 2)
+    cfg = KernelConfig(backend="interpret", dp_clip_tile=(4, 128))
+    got = dispatch.dp_clip_flat(x, 0.9, nk, sigma=0.8, denom=float(B), kernels=cfg)
+    want = dp_ref.dp_clip_reference(x, 0.9, nk, sigma=0.8, denom=float(B))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def test_chunked_per_example_matches_full_vmap(key):
+    n = 12
+    params = {"w": jax.random.normal(key, (5, 3))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, 5)) * 4
+    y = jax.random.normal(jax.random.fold_in(key, 2), (n, 3))
+    nk = jax.random.fold_in(key, 3)
+    for sigma in (0.0, 1.1):
+        full = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y}, nk,
+                                   clip=0.4, sigma=sigma)
+        for c in (3, 4, 6):
+            chunked = dp_lib.dp_gradients(_quad_loss, params, {"x": x, "y": y},
+                                          nk, clip=0.4, sigma=sigma,
+                                          per_example_chunk=c)
+            np.testing.assert_allclose(np.asarray(chunked["w"]),
+                                       np.asarray(full["w"]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_path_under_jit(key):
+    """The chunked scan + dispatch path must trace under jit (the P4 trainer
+    jits the whole local round)."""
+    n, c = 8, 4
+    params = {"w": jax.random.normal(key, (3, 2))}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (n, 3)),
+             "y": jax.random.normal(jax.random.fold_in(key, 2), (n, 2))}
+
+    @jax.jit
+    def f(p, b, k):
+        return dp_lib.dp_gradients(_quad_loss, p, b, k, clip=0.3, sigma=0.5,
+                                   per_example_chunk=c)
+
+    g = f(params, batch, jax.random.fold_in(key, 3))
+    assert np.isfinite(np.asarray(g["w"])).all()
+
+
+# ---------------------------------------------------------------------------
+# triangular l1 kernel
+# ---------------------------------------------------------------------------
+
+def test_tri_decode_exact():
+    for T in (1, 2, 3, 17, 100):
+        P = T * (T + 1) // 2
+        r, c = l1_kernel.tri_decode(jnp.arange(P))
+        want = [(j, i) for i in range(T) for j in range(i + 1)]
+        assert list(zip(np.asarray(r).tolist(), np.asarray(c).tolist())) == want
+
+
+def test_tri_decode_exact_at_scale():
+    """fp32-sqrt decode stays exact out to ~10⁶ pairs (the docstring's
+    claimed envelope; fp32 rounding first bites far beyond any real M)."""
+    T = 1413                                  # T(T+1)/2 ≈ 1.0e6 pairs
+    P = T * (T + 1) // 2
+    r, c = l1_kernel.tri_decode(jnp.arange(P))
+    r, c = np.asarray(r), np.asarray(c)
+    cw = np.repeat(np.arange(T), np.arange(1, T + 1))
+    rw = np.arange(P) - cw * (cw + 1) // 2
+    assert np.array_equal(c, cw) and np.array_equal(r, rw)
+
+
+@pytest.mark.parametrize("M,D", [(4, 128), (9, 300), (16, 1024)])
+def test_l1_triangular_symmetric_zero_diag(key, M, D):
+    w = jax.random.normal(key, (M, D)) * 2
+    got = np.asarray(l1_ops.pairwise_l1(w, tm=4, td=128))
+    assert np.array_equal(got, got.T)           # exact symmetry (mirror copy)
+    assert np.all(np.diag(got) == 0.0)
+    np.testing.assert_allclose(got, np.asarray(l1_ref.pairwise_l1(w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatched_pairwise_l1_matches_ref(key):
+    w = jax.random.normal(key, (10, 500))
+    got = dispatch.pairwise_l1(w)               # auto => ref on CPU
+    want = l1_ref.pairwise_l1(w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

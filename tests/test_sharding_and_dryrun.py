@@ -86,7 +86,8 @@ def test_mini_dryrun_subprocess():
                               out_shardings=(p_shard, o_shard, None)).lower(
                 params_abs, opt_abs, input_specs(cfg, shape))
             compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        from repro.launch.roofline import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         print(json.dumps({"flops": cost.get("flops", 0.0),
                           "ok": True}))
     """)
