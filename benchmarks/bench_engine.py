@@ -1,0 +1,113 @@
+"""Engine round-loop throughput: scan-chunked device-resident loop vs the
+legacy per-round Python loop (the pre-refactor trainer shape: host numpy
+batch sampling + one jitted dispatch + H2D transfer per round).
+
+The linear-model config on CPU is the paper's small-scale setting; the claim
+(ISSUE 2 acceptance) is that the engine's ``lax.scan`` loop wins on
+rounds/sec because it amortizes dispatch and keeps batch gathers on device.
+Writes ``BENCH_engine.json`` via ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import common
+from repro.baselines.local import LocalStrategy
+from repro.engine import Engine, FederatedData
+
+LAST_RECORDS = []
+
+
+def _make_data(M: int, R: int, feat: int, classes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, R))
+    xs = protos[ys] + rng.normal(size=(M, R, feat)).astype(np.float32) * 0.4
+    return xs, ys.astype(np.int32)
+
+
+def _legacy_loop(strategy, X, Y, rounds: int, batch: int, seed: int = 0):
+    """The deleted pre-refactor loop, reconstructed for comparison: numpy
+    index draw + take_along_axis on host, jnp.asarray transfer, one jitted
+    step dispatch per round."""
+    M, R = Y.shape
+    rng = np.random.default_rng(seed)
+    params = common.init_clients(strategy.specs, jax.random.PRNGKey(seed), M)
+
+    @jax.jit
+    def step(params, xs, ys, key):
+        def one(p, x, y, k):
+            g = common.client_grad(strategy.apply_fn, p, x, y, k)
+            return common.sgd_update(p, g, strategy.lr)
+        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
+
+    key = jax.random.PRNGKey(seed + 1)
+
+    def run():
+        nonlocal params
+        for r in range(rounds):
+            idx = rng.integers(0, R, size=(M, batch))
+            gx = np.take_along_axis(X, idx[..., None], axis=1)
+            gy = np.take_along_axis(Y, idx, axis=1)
+            params = step(params, jnp.asarray(gx), jnp.asarray(gy),
+                          jax.random.fold_in(key, r))
+        jax.tree_util.tree_leaves(params)[0].block_until_ready()
+
+    run()                                 # compile + warm caches
+    with_timer = time.perf_counter()
+    run()
+    return rounds / (time.perf_counter() - with_timer)
+
+
+def _engine_loop(strategy, X, Y, rounds: int, batch: int, seed: int = 0):
+    data = FederatedData(X, Y, jnp.asarray(X), jnp.asarray(Y))
+    engine = Engine(strategy, eval_every=rounds)
+    key = jax.random.PRNGKey(seed)
+
+    def run():
+        state, _ = engine.fit(data, rounds=rounds, key=key, batch_size=batch,
+                              evaluate=False)
+        jax.tree_util.tree_leaves(state)[0].block_until_ready()
+
+    run()                                 # compile the chunk once
+    t0 = time.perf_counter()
+    run()
+    return rounds / (time.perf_counter() - t0)
+
+
+def run(quick: bool = True):
+    rows = []
+    LAST_RECORDS.clear()
+    M, R, feat, classes = (16, 96, 64, 10) if quick else (32, 160, 15552, 10)
+    rounds = 100 if quick else 200
+    batch = 24
+    X, Y = _make_data(M, R, feat, classes)
+    strategy = LocalStrategy(feat_dim=feat, num_classes=classes, lr=0.5)
+
+    legacy_rps = _legacy_loop(strategy, X, Y, rounds, batch)
+    engine_rps = _engine_loop(strategy, X, Y, rounds, batch)
+    speedup = engine_rps / legacy_rps
+
+    rows.append(("engine_legacy_loop_rps", 1e6 / legacy_rps, round(legacy_rps, 1)))
+    rows.append(("engine_scan_loop_rps", 1e6 / engine_rps, round(engine_rps, 1)))
+    rows.append(("engine_scan_speedup", 0.0, round(speedup, 2)))
+    LAST_RECORDS.extend([
+        {"name": "legacy_python_loop", "rounds_per_sec": round(legacy_rps, 2),
+         "M": M, "R": R, "feat": feat, "rounds": rounds, "batch": batch},
+        {"name": "engine_scan_loop", "rounds_per_sec": round(engine_rps, 2),
+         "M": M, "R": R, "feat": feat, "rounds": rounds, "batch": batch},
+        {"name": "speedup", "value": round(speedup, 3)},
+    ])
+    print(f"[engine] legacy={legacy_rps:.1f} r/s scan={engine_rps:.1f} r/s "
+          f"speedup={speedup:.2f}x (linear model, M={M}, feat={feat})",
+          flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -41,7 +41,9 @@ def run(quick: bool = True):
     # ---- phase 1: similarity computation + message ------------------------
     net = P2PNetwork(M)
     one_client_params = jax.tree_util.tree_map(lambda t: t[0], states["proxy"])
-    t_msg = simulate_phase1(net, one_client_params, [(0, 1)])
+    # stacked (M, ...) tree: simulate_phase1 slices out the initiator's own
+    # (D,) weights per message (the paper's 622.82 kB figure is per client)
+    t_msg = simulate_phase1(net, states["proxy"], [(0, 1)])
     w = jnp.stack([jnp.concatenate([states["proxy"]["w"][i].ravel(),
                                     states["proxy"]["b"][i]]) for i in range(M)])
     with Timer() as t1:

@@ -6,8 +6,10 @@
   bench_overhead       §4.5            phase run time / bytes / memory
   bench_roofline       §Roofline       dry-run-derived terms per combo
   bench_kernels        (framework)     Pallas-vs-oracle microbench
+  bench_engine         (framework)     scan round loop vs legacy Python loop
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
+Suites exposing ``LAST_RECORDS`` also write ``BENCH_<suite>.json``.
 """
 from __future__ import annotations
 
@@ -31,37 +33,39 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_ablation, bench_heterogeneity, bench_kernels,
-                            bench_overhead, bench_privacy, bench_roofline)
+    from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
+                            bench_kernels, bench_overhead, bench_privacy,
+                            bench_roofline)
     suites = {
-        "kernels": bench_kernels.run,
-        "overhead": bench_overhead.run,
-        "roofline": bench_roofline.run,
-        "privacy": bench_privacy.run,
-        "ablation": bench_ablation.run,
-        "heterogeneity": bench_heterogeneity.run,
+        "kernels": bench_kernels,
+        "engine": bench_engine,
+        "overhead": bench_overhead,
+        "roofline": bench_roofline,
+        "privacy": bench_privacy,
+        "ablation": bench_ablation,
+        "heterogeneity": bench_heterogeneity,
     }
     rows = []
-    for name, fn in suites.items():
+    for name, mod in suites.items():
         if args.only and name not in args.only:
             continue
         t0 = time.time()
         print(f"\n===== {name} =====", flush=True)
         try:
-            rows.extend(fn(quick=quick))
+            rows.extend(mod.run(quick=quick))
         except Exception as e:  # a failing suite must not hide the others
             print(f"[{name}] FAILED: {type(e).__name__}: {e}", file=sys.stderr)
             rows.append((f"{name}_FAILED", 0.0, type(e).__name__))
         print(f"===== {name} done in {time.time()-t0:.0f}s =====", flush=True)
-        if name == "kernels" and bench_kernels.LAST_RECORDS:
+        if getattr(mod, "LAST_RECORDS", None):
             import jax
             payload = {"platform": jax.default_backend(),
                        "quick": quick,
-                       "entries": bench_kernels.LAST_RECORDS}
-            out_path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+                       "entries": mod.LAST_RECORDS}
+            out_path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
             with open(out_path, "w") as f:
                 json.dump(payload, f, indent=2)
-            print(f"[kernels] wrote {out_path}", flush=True)
+            print(f"[{name}] wrote {out_path}", flush=True)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,4 +1,6 @@
-"""The paper's comparison methods (§4.2.1), all in JAX on the same substrate:
+"""The paper's comparison methods (§4.2.1), all in JAX on the same substrate
+and all run by the unified federation engine (``repro.engine``) — each module
+defines a registered Strategy plus a thin legacy-signature ``train`` wrapper:
 
   local        — per-client training, no communication (strong non-IID baseline)
   centralized  — pooled-data upper reference (with/without HC features)

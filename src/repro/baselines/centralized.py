@@ -1,38 +1,58 @@
 """Centralized baseline: all data pooled, one model, no privacy (paper's
-'optimal scenario' reference, §4.2.1)."""
+'optimal scenario' reference, §4.2.1). In engine terms it is the degenerate
+M=1 strategy: the pool is a single "client", and evaluation broadcasts the
+one model across the per-client test stacks so the reported metric is the
+same per-client mean accuracy as every other method."""
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.baselines import common
 from repro.core.small_models import accuracy
+from repro.engine import Engine, FederatedData, Strategy, register_strategy
+
+
+@register_strategy("centralized")
+@dataclass(eq=False)
+class CentralizedStrategy(Strategy):
+    feat_dim: int = 0
+    num_classes: int = 2
+    lr: float = 0.5
+
+    def __post_init__(self):
+        self.specs, self.apply_fn = common.make_model(self.feat_dim,
+                                                      self.num_classes)
+        self._loss = common.ce_loss(self.apply_fn)
+
+    def init(self, key, data: FederatedData, batch_size):
+        return jax.tree_util.tree_map(
+            lambda t: t[0], common.init_clients(self.specs, key, 1))
+
+    def local_update(self, params, xs, ys, r, key):
+        # xs: (1, B, feat) — the pooled "client"
+        g = jax.grad(self._loss)(params, {"x": xs[0], "y": ys[0]})
+        return common.sgd_update(params, g, self.lr), {}
+
+    def eval_params(self, state):
+        return state
+
+    def evaluate(self, state, test_x, test_y):
+        return jax.vmap(lambda x, y: accuracy(self.apply_fn(state, x), y))(
+            test_x, test_y)
 
 
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
           batch_size: int = 256, seed: int = 0, eval_every: int = 20):
     """train_x: pooled (N, feat); test per-client (M, n, feat) so we report the
     same per-client-mean accuracy metric as every other method."""
-    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
-    specs, apply_fn = common.make_model(feat, classes)
-    params = jax.tree_util.tree_map(
-        lambda s: s, common.init_clients(specs, jax.random.PRNGKey(seed), 1))
-    params = jax.tree_util.tree_map(lambda t: t[0], params)
-    rng = np.random.default_rng(seed)
-    loss = common.ce_loss(apply_fn)
-
-    @jax.jit
-    def step(params, x, y):
-        g = jax.grad(loss)(params, {"x": x, "y": y})
-        return common.sgd_update(params, g, lr)
-
-    history = []
-    N = train_x.shape[0]
-    for r in range(rounds):
-        idx = rng.integers(0, N, batch_size)
-        params = step(params, jnp.asarray(train_x[idx]), jnp.asarray(train_y[idx]))
-        if r % eval_every == 0 or r == rounds - 1:
-            acc = jax.vmap(lambda x, y: accuracy(apply_fn(params, x), y))(test_x, test_y)
-            history.append((r, float(jnp.mean(acc))))
-    return params, history
+    feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
+    strategy = CentralizedStrategy(feat_dim=feat, num_classes=classes, lr=lr)
+    data = FederatedData(jnp.asarray(train_x)[None], jnp.asarray(train_y)[None],
+                         test_x, test_y)
+    state, hist = Engine(strategy, eval_every=eval_every).fit(
+        data, rounds=rounds, key=jax.random.PRNGKey(seed),
+        batch_size=batch_size)
+    return state, hist.as_tuples()

@@ -1,12 +1,11 @@
-"""Shared machinery for the baseline trainers: every method trains ONE model
-per client (stacked (M, ...) pytrees) on the same features/data as P4."""
+"""Shared machinery for the baseline strategies: every method trains ONE model
+per client (stacked (M, ...) pytrees) on the same features/data as P4. The
+round loop itself lives in ``repro.engine`` — these are the building blocks
+the Strategy hooks are written in."""
 from __future__ import annotations
-
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dp as dp_lib
 from repro.core.small_models import accuracy, linear_apply, linear_specs
@@ -49,19 +48,6 @@ def init_clients(specs, key, M: int):
 def evaluate_clients(apply_fn, stacked_params, xs, ys):
     """(M,) per-client test accuracy."""
     return jax.vmap(lambda p, x, y: accuracy(apply_fn(p, x), y))(stacked_params, xs, ys)
-
-
-def batch_sampler(train_x, train_y, batch_size: int, seed: int = 0):
-    M, R = train_y.shape
-    rng = np.random.default_rng(seed)
-
-    def sample():
-        idx = rng.integers(0, R, size=(M, batch_size))
-        gx = np.take_along_axis(train_x, idx[..., None], axis=1)
-        gy = np.take_along_axis(train_y, idx, axis=1)
-        return jnp.asarray(gx), jnp.asarray(gy)
-
-    return sample
 
 
 def tree_mean(stacked):

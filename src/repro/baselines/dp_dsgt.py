@@ -6,8 +6,13 @@ solution), which is exactly what the paper argues fails under non-IID tasks.
   y_i ← Σ_j W_ij ỹ_j + (g_i(x⁺) − g_i(x))
 
 where x̃/ỹ are the DP-noised (clipped) shared quantities.
+
+Engine form: state = {params, tracker, last gradients}; the tracker is
+bootstrapped in ``init`` from a first on-device batch draw.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +20,8 @@ import jax.numpy as jnp
 from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
-from repro.utils.pytree import global_norm
+from repro.engine import (Engine, FederatedData, Strategy, register_strategy,
+                          sample_client_batches)
 
 
 def _ring_mix(stacked, self_w: float = 0.5):
@@ -27,48 +33,66 @@ def _ring_mix(stacked, self_w: float = 0.5):
     return jax.tree_util.tree_map(mix, stacked)
 
 
+@register_strategy("dp_dsgt")
+@dataclass(eq=False)
+class DPDSGTStrategy(Strategy):
+    feat_dim: int = 0
+    num_classes: int = 2
+    lr: float = 0.3
+    clip: float = 1.0
+    sigma: float = 0.0
+
+    def __post_init__(self):
+        self.specs, self.apply_fn = common.make_model(self.feat_dim,
+                                                      self.num_classes)
+
+    def _grads(self, params, xs, ys, key):
+        def one(p, x, y, k):
+            return common.client_grad(self.apply_fn, p, x, y, k,
+                                      dp_cfg=DPConfig(clip_norm=self.clip),
+                                      sigma=self.sigma)
+        M = ys.shape[0]
+        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
+
+    def init(self, key, data: FederatedData, batch_size):
+        k1, k2, k3 = jax.random.split(key, 3)
+        x_params = common.init_clients(self.specs, k1, data.num_clients)
+        xs0, ys0 = sample_client_batches(data.train_x, data.train_y, k2,
+                                         batch_size)
+        y_track = self._grads(x_params, xs0, ys0, k3)
+        # distinct buffers: the engine donates the carry, and XLA rejects the
+        # same buffer appearing twice in a donated argument
+        return {"x": x_params, "y": y_track,
+                "g": jax.tree_util.tree_map(jnp.copy, y_track)}
+
+    def local_update(self, state, xs, ys, r, key):
+        x_new = _ring_mix(state["x"])
+        x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
+                                       x_new, state["y"])
+        g_new = self._grads(x_new, xs, ys, key)
+        y_new = _ring_mix(state["y"])
+        y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
+                                       y_new, g_new, state["g"])
+        return {"x": x_new, "y": y_new, "g": g_new}, {}
+
+    def eval_params(self, state):
+        return state["x"]
+
+
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.3,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
           dp: bool = True):
-    M, R = train_y.shape
-    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
-    specs, apply_fn = common.make_model(feat, classes)
+    R = train_y.shape[1]
+    feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
     sigma = (dp_lib.noble_sigma(epsilon, delta, sample_rate=batch_size / R,
                                 rounds=rounds) if dp else 0.0)
-    loss = common.ce_loss(apply_fn)
 
-    key = jax.random.PRNGKey(seed)
-    x_params = common.init_clients(specs, key, M)
-    sample = common.batch_sampler(train_x, train_y, batch_size, seed)
-
-    def grads(params, xs, ys, k):
-        def one(p, x, y, kk):
-            return common.client_grad(apply_fn, p, x, y, kk,
-                                      dp_cfg=DPConfig(clip_norm=clip), sigma=sigma if dp else 0.0)
-        return jax.vmap(one)(params, xs, ys, jax.random.split(k, M))
-
-    xs0, ys0 = sample()
-    y_track = grads(x_params, jnp.asarray(xs0), jnp.asarray(ys0), key)
-    g_prev = y_track
-
-    @jax.jit
-    def step(x_params, y_track, g_prev, xs, ys, k):
-        x_new = _ring_mix(x_params)
-        x_new = jax.tree_util.tree_map(lambda x, y: x - lr * y, x_new, y_track)
-        g_new = grads(x_new, xs, ys, k)
-        y_new = _ring_mix(y_track)
-        y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b, y_new, g_new, g_prev)
-        return x_new, y_new, g_new
-
-    history = []
-    for r in range(rounds):
-        xs, ys = sample()
-        x_params, y_track, g_prev = step(x_params, y_track, g_prev, xs, ys,
-                                         jax.random.fold_in(key, r + 1))
-        if r % eval_every == 0 or r == rounds - 1:
-            acc = common.evaluate_clients(apply_fn, x_params, test_x, test_y)
-            history.append((r, float(jnp.mean(acc))))
-    return x_params, history, sigma
-
+    strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=lr,
+                              clip=clip, sigma=sigma if dp else 0.0)
+    data = FederatedData(train_x, train_y, test_x, test_y)
+    state, hist = Engine(strategy, eval_every=eval_every).fit(
+        data, rounds=rounds, key=jax.random.PRNGKey(seed),
+        batch_size=batch_size)
+    return state["x"], hist.as_tuples(), sigma

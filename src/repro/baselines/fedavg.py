@@ -1,66 +1,92 @@
 """DP-FedAvg (McMahan et al. [35] + record-level DP toward an honest-but-
 curious server). Noise is RDP-accounted for the subsampled Gaussian over T
 rounds with user sampling ratio u (paper §4.2.1 / Noble et al.).
+
+Engine form: state is the single global model; ``local_update`` broadcasts it
+to M clients and runs K DP local steps, ``aggregate`` draws the user cohort
+mask on device and takes the cohort-weighted mean back to a global model.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
+from repro.engine import Engine, FederatedData, Strategy, register_strategy
+
+
+@register_strategy("fedavg")
+@dataclass(eq=False)
+class FedAvgStrategy(Strategy):
+    feat_dim: int = 0
+    num_classes: int = 2
+    lr: float = 0.5
+    clip: float = 1.0
+    sigma: float = 0.0
+    local_steps: int = 1
+    user_ratio: float = 1.0
+
+    def __post_init__(self):
+        self.specs, self.apply_fn = common.make_model(self.feat_dim,
+                                                      self.num_classes)
+
+    def init(self, key, data: FederatedData, batch_size):
+        return jax.tree_util.tree_map(
+            lambda t: t[0], common.init_clients(self.specs, key, 1))
+
+    def local_update(self, gp, xs, ys, r, key):
+        M = ys.shape[0]
+        params = common.broadcast_like(gp, M)
+
+        def one(p, x, y, k):
+            def body(pp, i):
+                g = common.client_grad(
+                    self.apply_fn, pp, x, y, jax.random.fold_in(k, i),
+                    dp_cfg=DPConfig(clip_norm=self.clip), sigma=self.sigma)
+                return common.sgd_update(pp, g, self.lr), None
+            p2, _ = jax.lax.scan(body, p, jnp.arange(self.local_steps))
+            return p2
+
+        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M)), {}
+
+    def aggregate(self, clients, r, key):
+        M = jax.tree_util.tree_leaves(clients)[0].shape[0]
+        k1, k2 = jax.random.split(key)
+        mask = (jax.random.uniform(k1, (M,)) < self.user_ratio).astype(jnp.float32)
+        # empty cohort → fall back to one random participant
+        fallback = jnp.zeros((M,)).at[jax.random.randint(k2, (), 0, M)].set(1.0)
+        mask = jnp.where(jnp.sum(mask) > 0, mask, fallback)
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        return jax.tree_util.tree_map(
+            lambda n: jnp.einsum("m...,m->...", n, w), clients)
+
+    def eval_params(self, state):
+        return state  # unused: evaluate() broadcasts
+
+    def evaluate(self, state, test_x, test_y):
+        params = common.broadcast_like(state, test_y.shape[0])
+        return common.evaluate_clients(self.apply_fn, params, test_x, test_y)
 
 
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
           user_ratio: float = 1.0, local_steps: int = 1, dp: bool = True):
-    M, R = train_y.shape
-    feat, classes = train_x.shape[-1], int(jnp.max(train_y)) + 1
-    specs, apply_fn = common.make_model(feat, classes)
+    R = train_y.shape[1]
+    feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
     q = batch_size / R
     sigma = dp_lib.calibrate_sigma(epsilon, delta, q, rounds * local_steps) if dp else 0.0
 
-    global_params = jax.tree_util.tree_map(
-        lambda t: t[0], common.init_clients(specs, jax.random.PRNGKey(seed), 1))
-    sample = common.batch_sampler(train_x, train_y, batch_size, seed)
-    rng = np.random.default_rng(seed + 7)
-
-    @jax.jit
-    def round_step(gp, xs, ys, key, mask):
-        params = common.broadcast_like(gp, M)
-
-        def one(p, x, y, k):
-            def body(pp, i):
-                g = common.client_grad(
-                    apply_fn, pp, x, y, jax.random.fold_in(k, i),
-                    dp_cfg=DPConfig(clip_norm=clip), sigma=sigma)
-                return common.sgd_update(pp, g, lr), None
-            p2, _ = jax.lax.scan(body, p, jnp.arange(local_steps))
-            return p2
-
-        new = jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
-        # server average over the sampled user cohort
-        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
-        avg = jax.tree_util.tree_map(
-            lambda n: jnp.einsum("m...,m->...", n, w), new)
-        return avg
-
-    history = []
-    key = jax.random.PRNGKey(seed + 1)
-    for r in range(rounds):
-        xs, ys = sample()
-        mask = (rng.random(M) < user_ratio).astype(np.float32)
-        if mask.sum() == 0:
-            mask[rng.integers(M)] = 1.0
-        global_params = round_step(global_params, xs, ys,
-                                   jax.random.fold_in(key, r), jnp.asarray(mask))
-        if r % eval_every == 0 or r == rounds - 1:
-            params = common.broadcast_like(global_params, M)
-            acc = common.evaluate_clients(apply_fn, params, test_x, test_y)
-            history.append((r, float(jnp.mean(acc))))
-    return global_params, history, sigma
-
+    strategy = FedAvgStrategy(feat_dim=feat, num_classes=classes, lr=lr,
+                              clip=clip, sigma=sigma, local_steps=local_steps,
+                              user_ratio=user_ratio)
+    data = FederatedData(train_x, train_y, test_x, test_y)
+    state, hist = Engine(strategy, eval_every=eval_every).fit(
+        data, rounds=rounds, key=jax.random.PRNGKey(seed),
+        batch_size=batch_size)
+    return state, hist.as_tuples(), sigma

@@ -6,4 +6,4 @@ from repro.core.dp import (clip_by_global_norm, noble_sigma, add_noise,
 from repro.core.distill import proxy_loss, private_loss
 from repro.core.grouping import (pairwise_l1, greedy_group_formation,
                                  random_groups, group_matrix)
-from repro.core.p4 import P4Trainer, make_p4_lm_step
+from repro.core.p4 import P4Strategy, P4Trainer, make_p4_lm_step

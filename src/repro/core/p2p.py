@@ -70,8 +70,13 @@ def simulate_group_round(net: P2PNetwork, group: List[int], proxy_params,
 
 def simulate_phase1(net: P2PNetwork, client_weights, sample_pairs) -> float:
     """Phase-1 communication: each sampled pair exchanges model weights once
-    (initiator sends; paper §4.5 measures the 622.82 kB weight message)."""
+    (initiator sends; paper §4.5 measures the 622.82 kB weight message).
+
+    ``client_weights`` is the stacked (M, ...) client pytree; each initiator
+    i sends ONLY its own (D,) slice — sending the full stack would log M×
+    the paper's per-message figure."""
     t0 = time.perf_counter()
     for (i, j) in sample_pairs:
-        net.send(i, j, client_weights, "phase1_weights")
+        own = jax.tree_util.tree_map(lambda t: t[i], client_weights)
+        net.send(i, j, own, "phase1_weights")
     return time.perf_counter() - t0

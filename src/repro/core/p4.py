@@ -14,8 +14,8 @@ gradient reduction group-internal by construction, exactly the paper's
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +26,8 @@ from repro.core import distill, dp as dp_lib
 from repro.core.grouping import (flatten_clients, greedy_group_formation,
                                  group_ids, pairwise_l1, random_groups)
 from repro.core.small_models import accuracy, linear_apply, linear_specs, make_cnn
+from repro.engine import Engine, FederatedData, Strategy, register_strategy
 from repro.models.module import init_params
-from repro.utils.pytree import tree_scale
 
 
 def group_mean(stacked_tree, ids: jnp.ndarray, num_groups: int):
@@ -122,9 +122,10 @@ class P4Trainer:
         return new_private, new_proxy, metrics
 
     # ------------------------------------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
-    def local_round(self, states, xs, ys, key):
-        """K local steps for all clients. xs: (M, B, feat), ys: (M, B)."""
+    def _local_round_impl(self, states, xs, ys, key):
+        """K local steps for all clients. xs: (M, B, feat), ys: (M, B).
+        Unjitted body — traced either by the jitted ``local_round`` below or
+        inside the engine's scanned round loop."""
         lr = self.cfg.train.learning_rate
         K = self.cfg.dp.local_steps
         M = ys.shape[0]
@@ -144,6 +145,10 @@ class P4Trainer:
         priv, prox, metrics = jax.vmap(one_client)(
             states["private"], states["proxy"], xs, ys, keys)
         return {"private": priv, "proxy": prox}, metrics
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def local_round(self, states, xs, ys, key):
+        return self._local_round_impl(states, xs, ys, key)
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0, 3))
@@ -175,49 +180,101 @@ class P4Trainer:
     def fit(self, train_x, train_y, test_x, test_y, *, rounds: Optional[int] = None,
             key=None, eval_every: int = 20, batch_size: Optional[int] = None,
             groups: Optional[List[List[int]]] = None, seed: int = 0,
-            bootstrap_rounds: int = 4):
-        """Full P4: bootstrap round(s) -> grouping -> T co-training rounds.
+            bootstrap_rounds: int = 4, network=None, checkpoint_dir=None,
+            resume: bool = False):
+        """Full P4 on the federation engine: a full-batch bootstrap phase
+        (no aggregation, no eval), host-side grouping on the DP weights, then
+        the co-training phase as one scan-chunked engine run.
 
         bootstrap_rounds > 1 trades a few pre-grouping rounds for grouping
         SNR: DP noise on the weights grows √k while the data-driven weight
         divergence grows k, so the ℓ1 metric's signal-to-noise improves √k
         (EXPERIMENTS.md §Paper-validation discusses the feasibility envelope
-        n·√k the paper's own setup implicitly satisfies with R=200–300)."""
+        n·√k the paper's own setup implicitly satisfies with R=200–300).
+
+        ``network`` (a P2PNetwork) and ``checkpoint_dir`` are forwarded to the
+        engine as hooks: §4.5 byte accounting and save/resume come from the
+        same loop as training."""
         rounds = rounds or self.cfg.dp.rounds
         key = key if key is not None else jax.random.PRNGKey(self.cfg.train.seed)
         M, R = train_y.shape
         bs = batch_size or max(8, int(self.cfg.dp.sample_rate * R))
-        rng = np.random.default_rng(seed)
-
-        states = self.init_clients(key, M)
-
-        def sample_batches(r):
-            idx = rng.integers(0, R, size=(M, bs))
-            gx = np.take_along_axis(train_x, idx[..., None], axis=1)
-            gy = np.take_along_axis(train_y, idx, axis=1)
-            return jnp.asarray(gx), jnp.asarray(gy)
+        data = FederatedData(train_x, train_y, test_x, test_y)
+        strategy = P4Strategy(trainer=self)
+        nb = max(1, bootstrap_rounds)
 
         # bootstrap local steps on the FULL local dataset (paper §3.3: weights
         # after first local training; Eq. 11's noise scales with 1/n, so the
         # full batch + k rounds maximize the grouping signal-to-noise)
-        for br in range(max(1, bootstrap_rounds)):
-            states, _ = self.local_round(states, jnp.asarray(train_x),
-                                         jnp.asarray(train_y),
-                                         jax.random.fold_in(key, br))
+        bootstrap = Engine(strategy, eval_every=eval_every)
+        states, _ = bootstrap.fit(data, rounds=nb, key=jax.random.fold_in(key, 0),
+                                  batch_size=None, evaluate=False)
         if groups is None:
             groups = self.form_groups(states, seed)
-        ids = jnp.asarray(group_ids(groups, M))
-        G = len(groups)
+        strategy.set_groups(groups, M)
 
-        history = []
-        for r in range(max(1, bootstrap_rounds), rounds):
-            xs, ys = sample_batches(r)
-            states, metrics = self.local_round(states, xs, ys, jax.random.fold_in(key, r))
-            states = self.aggregate(states, ids, G)
-            if r % eval_every == 0 or r == rounds - 1:
-                acc = self.evaluate(states, test_x, test_y)
-                history.append((r, float(jnp.mean(acc))))
+        engine = Engine(strategy, eval_every=eval_every, network=network,
+                        checkpoint_dir=checkpoint_dir)
+        states, history = engine.fit(data, rounds=rounds,
+                                     key=jax.random.fold_in(key, 1),
+                                     batch_size=bs, start_round=nb,
+                                     state=states, resume=resume)
         return states, groups, history
+
+
+# ---------------------------------------------------------------------------
+# Engine strategy: P4's co-training round as init/local_update/aggregate hooks
+# ---------------------------------------------------------------------------
+
+@register_strategy("p4")
+@dataclass(eq=False)
+class P4Strategy(Strategy):
+    """P4 as an engine Strategy. Grouping is set between the bootstrap and
+    co-training phases via ``set_groups`` (host-side — the greedy procedure
+    is inherently sequential); until then ``aggregate`` is the identity."""
+    trainer: P4Trainer = None
+    groups: Optional[List[List[int]]] = None
+    ids: Optional[jnp.ndarray] = None
+    num_groups: int = 0
+
+    @property
+    def apply_fn(self):
+        return self.trainer.apply_fn
+
+    def set_groups(self, groups: List[List[int]], M: int) -> None:
+        self.groups = groups
+        self.ids = jnp.asarray(group_ids(groups, M))
+        self.num_groups = len(groups)
+        self.cache_token += 1    # aggregate() changed: invalidate engine chunks
+
+    def init(self, key, data: FederatedData, batch_size):
+        return self.trainer.init_clients(key, data.num_clients)
+
+    def local_update(self, states, xs, ys, r, key):
+        states, metrics = self.trainer._local_round_impl(states, xs, ys, key)
+        return states, {k: jnp.mean(v) for k, v in metrics.items()}
+
+    def aggregate(self, states, r, key):
+        if self.ids is None:          # bootstrap phase: no groups yet
+            return states
+        return {"private": states["private"],
+                "proxy": group_mean(states["proxy"], self.ids, self.num_groups)}
+
+    def eval_params(self, states):
+        """Per-client PERSONALIZED (private) model."""
+        return states["private"]
+
+    def log_communication(self, net, states, r: int) -> None:
+        """§4.5 Phase-2 accounting: members → rotating aggregator → members,
+        one per-client proxy payload per message (matches
+        ``p2p.simulate_group_round`` for the same groups — tested)."""
+        if not self.groups:
+            return
+        from repro.core.p2p import simulate_group_round
+        rotation = self.trainer.cfg.p4.aggregator_rotation
+        for g in self.groups:
+            payload = jax.tree_util.tree_map(lambda t: t[g[0]], states["proxy"])
+            simulate_group_round(net, g, payload, rnd=r, rotation=rotation)
 
 
 # ---------------------------------------------------------------------------

@@ -24,3 +24,17 @@ def token_stream(seed: int, batch: int, seq: int, vocab: int):
     rng = np.random.default_rng(seed)
     while True:
         yield synth_token_batch(rng, batch, seq, vocab)
+
+
+def synth_token_batch_device(key, batch: int, seq: int, vocab: int,
+                             period: int = 17):
+    """Same structured stream as :func:`synth_token_batch`, but drawn with
+    ``jax.random`` so it can live INSIDE a jitted step — the engine's scanned
+    LM loop (``repro.engine.make_scan_steps``) never touches the host."""
+    import jax
+    import jax.numpy as jnp
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, (batch, 1), 0, vocab)
+    steps = jax.random.randint(k2, (batch, seq), 1, 7)
+    phase = (jnp.arange(seq) % period)[None, :]
+    return ((base + jnp.cumsum(steps, axis=1) + 3 * phase) % vocab).astype(jnp.int32)

@@ -1,0 +1,7 @@
+"""Unified federation engine: one device-resident round loop + a strategy
+registry covering P4 and every baseline (see README §Federation engine)."""
+from repro.engine.loop import (Engine, History, eval_rounds, make_scan_steps,
+                               sample_client_batches)
+from repro.engine.strategy import (FederatedData, Strategy,
+                                   available_strategies, get_strategy,
+                                   register_strategy)

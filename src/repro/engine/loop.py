@@ -1,0 +1,224 @@
+"""The federated-simulation engine: one device-resident round loop for all
+methods.
+
+The legacy trainers each hand-rolled a Python ``for r in range(rounds)`` loop
+with host-side numpy batch sampling — every round paid one dispatch plus an
+H2D transfer of M×B×D batch data. Here the loop is the fast path:
+
+  * batch indices are drawn with ``jax.random`` *inside* the jitted step and
+    gathered from the device-resident ``(M, R, ...)`` training stacks — no
+    per-round host↔device traffic at all;
+  * rounds are chunked under ``jax.lax.scan`` between eval points, with the
+    state carry donated, so a 100-round sweep is a handful of XLA calls
+    rather than hundreds of Python dispatches;
+  * every method shares the same eval cadence and ``History`` record, so
+    trainers can only differ in their Strategy hooks.
+
+Per-round randomness is derived as ``fold_in(phase_key, r)`` — a Python loop
+driving the same round body reproduces the scan bit-for-bit (tested in
+``tests/test_engine.py``), which is what makes the refactor safe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.strategy import FederatedData, Strategy
+
+
+def sample_client_batches(train_x, train_y, key, batch_size: Optional[int]):
+    """Per-client minibatches drawn on device: (M, B, ...), (M, B).
+
+    ``batch_size=None`` means full-batch (returns the stacks unchanged —
+    used by P4's bootstrap phase, which trains on the whole local dataset).
+    """
+    if batch_size is None:
+        return train_x, train_y
+    M, R = train_y.shape
+    idx = jax.random.randint(key, (M, batch_size), 0, R)
+    xs = jnp.take_along_axis(
+        train_x, idx.reshape(idx.shape + (1,) * (train_x.ndim - 2)), axis=1)
+    ys = jnp.take_along_axis(train_y, idx, axis=1)
+    return xs, ys
+
+
+@dataclass
+class History:
+    """Unified metrics record shared by every trainer."""
+    rounds: List[int] = field(default_factory=list)
+    accuracy: List[float] = field(default_factory=list)
+    metrics: Dict[str, List[float]] = field(default_factory=dict)
+
+    def record(self, r: int, acc: float, metrics: Optional[Dict[str, float]] = None):
+        self.rounds.append(int(r))
+        self.accuracy.append(float(acc))
+        for k, v in (metrics or {}).items():
+            self.metrics.setdefault(k, []).append(float(v))
+
+    def as_tuples(self) -> List[Tuple[int, float]]:
+        """Legacy ``[(round, mean_accuracy)]`` shape used by benchmarks."""
+        return list(zip(self.rounds, self.accuracy))
+
+    def last(self) -> Tuple[int, float]:
+        return self.rounds[-1], self.accuracy[-1]
+
+    # sequence protocol: drop-in for the legacy [(round, acc)] histories
+    def __len__(self) -> int:
+        return len(self.rounds)
+
+    def __getitem__(self, i):
+        return self.as_tuples()[i]
+
+    def __iter__(self):
+        return iter(self.as_tuples())
+
+
+def eval_rounds(start: int, rounds: int, eval_every: int) -> List[int]:
+    """The legacy cadence: after round r when r % eval_every == 0, plus the
+    final round — preserved exactly so histories line up across the port."""
+    ev = max(int(eval_every), 1)
+    out = [r for r in range(start, rounds) if r % ev == 0]
+    if rounds - 1 >= start and (rounds - 1) not in out:
+        out.append(rounds - 1)
+    return out
+
+
+@dataclass(eq=False)  # identity hash: instances close over jitted chunks
+class Engine:
+    """Owns the round loop; the strategy owns the method.
+
+    Optional hooks:
+      network         — a ``repro.core.p2p.P2PNetwork``; at each eval boundary
+                        the strategy's ``log_communication`` is invoked for
+                        every elapsed round, so §4.5 byte/message accounting
+                        falls out of the same loop as training.
+      checkpoint_dir  — save the strategy state at every eval point and
+                        resume from the latest checkpoint via ``fit(resume=True)``.
+    """
+    strategy: Strategy
+    eval_every: int = 20
+    network: Optional[Any] = None
+    checkpoint_dir: Optional[str] = None
+
+    def __post_init__(self):
+        self._chunk_cache: Dict[Tuple[int, Optional[int]], Any] = {}
+
+    # ------------------------------------------------------------------
+    def _chunk_fn(self, length: int, batch_size: Optional[int]):
+        """Jitted scan over ``length`` rounds; the state carry is donated.
+        The cache key includes the strategy's ``cache_token`` so host-side
+        strategy changes (e.g. groups set between phases) can't be silently
+        shadowed by a previously compiled chunk."""
+        key_ = (length, batch_size, self.strategy.cache_token)
+        if key_ in self._chunk_cache:
+            return self._chunk_cache[key_]
+        strategy = self.strategy
+
+        def run(state, phase_key, train_x, train_y, start):
+            def body(state, r):
+                rk = jax.random.fold_in(phase_key, r)
+                xs, ys = sample_client_batches(
+                    train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+                state, metrics = strategy.local_update(
+                    state, xs, ys, r, jax.random.fold_in(rk, 1))
+                state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+                return state, metrics
+
+            return jax.lax.scan(body, state, start + jnp.arange(length))
+
+        fn = jax.jit(run, donate_argnums=0)
+        self._chunk_cache[key_] = fn
+        return fn
+
+    def run_rounds(self, state, data: FederatedData, phase_key, start: int,
+                   stop: int, batch_size: Optional[int]):
+        """Run rounds [start, stop) as one scanned chunk. Returns
+        (state, metrics) with metrics stacked over the chunk's rounds."""
+        if stop <= start:
+            return state, {}
+        fn = self._chunk_fn(stop - start, batch_size)
+        return fn(state, phase_key, data.train_x, data.train_y,
+                  jnp.asarray(start, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def fit(self, data: FederatedData, *, rounds: int, key,
+            batch_size: Optional[int] = None, start_round: int = 0,
+            state=None, evaluate: bool = True, history: Optional[History] = None,
+            resume: bool = False):
+        """Run one phase of training: rounds [start_round, rounds).
+
+        ``state=None`` initializes via the strategy. With ``evaluate=False``
+        the phase runs as a single chunk with no eval (P4's bootstrap).
+        """
+        strategy = self.strategy
+        init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+        if state is None:
+            state = strategy.init(init_key, data, batch_size)
+        history = history if history is not None else History()
+
+        if resume and self.checkpoint_dir:
+            from repro.checkpoint import latest_step, restore_checkpoint
+            step = latest_step(self.checkpoint_dir)
+            if step is not None:
+                saved, step = restore_checkpoint(
+                    self.checkpoint_dir, strategy.state_to_save(state), step)
+                state = saved
+                start_round = step + 1
+
+        boundaries = (eval_rounds(start_round, rounds, self.eval_every)
+                      if evaluate else [])
+        cursor = start_round
+        for ev in boundaries:
+            state, metrics = self.run_rounds(state, data, phase_key, cursor,
+                                             ev + 1, batch_size)
+            self._log_network(state, cursor, ev)
+            cursor = ev + 1
+            acc = strategy.evaluate(state, data.test_x, data.test_y)
+            chunk_means = {k: jnp.mean(v) for k, v in (metrics or {}).items()}
+            history.record(ev, jnp.mean(acc), chunk_means)
+            if self.checkpoint_dir:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(self.checkpoint_dir, ev,
+                                strategy.state_to_save(state))
+        if cursor < rounds:  # tail (or the whole phase when evaluate=False)
+            state, _ = self.run_rounds(state, data, phase_key, cursor, rounds,
+                                       batch_size)
+            self._log_network(state, cursor, rounds - 1)
+        return state, history
+
+    # ------------------------------------------------------------------
+    def _log_network(self, state, first_round: int, last_round: int) -> None:
+        if self.network is None:
+            return
+        for r in range(first_round, last_round + 1):
+            self.strategy.log_communication(self.network, state, r)
+
+
+# ---------------------------------------------------------------------------
+# LM-scale step loop (the launch/train.py --p4 driver)
+# ---------------------------------------------------------------------------
+
+def make_scan_steps(step_fn, make_batch, length: int):
+    """Chunk ``length`` LM training steps under one jitted ``lax.scan``.
+
+    ``make_batch(key, i)`` must build the step's batch *inside* the trace
+    (e.g. ``jax.random``-drawn synthetic tokens) so the loop never touches
+    the host; the (params, opt_states) carry is donated.
+    """
+    def run(params, opt_states, key, start):
+        def body(carry, i):
+            params, opt_states = carry
+            k = jax.random.fold_in(key, i)
+            batch = make_batch(jax.random.fold_in(k, 0), i)
+            params, opt_states, metrics = step_fn(
+                params, opt_states, batch, jax.random.fold_in(k, 1))
+            return (params, opt_states), metrics["loss"]
+
+        (params, opt_states), losses = jax.lax.scan(
+            body, (params, opt_states), start + jnp.arange(length))
+        return params, opt_states, losses
+
+    return jax.jit(run, donate_argnums=(0, 1))

@@ -1,0 +1,132 @@
+"""Strategy interface + registry for the unified federation engine.
+
+Every federated method in the repo — P4 and all §4.2.1 baselines — is a
+``Strategy``: a small object exposing ``init → local_update → aggregate →
+eval_params`` hooks over client state pytrees (usually stacked ``(M, ...)``
+trees, one leading slot per client). The engine (``repro.engine.loop``) owns
+the round schedule, on-device batch sampling, eval cadence, history, and the
+optional communication/checkpoint hooks, so methods cannot drift apart on
+anything but their update rule.
+
+This mirrors how Bellet et al. (Personalized and Private P2P ML) and MAPL
+frame decentralized learning: one round schedule, pluggable local-update /
+communicate / aggregate operators.
+
+Registry: ``@register_strategy("name")`` on the class; ``get_strategy("name")``
+returns the class so sweeps can be driven by config strings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_strategy(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Strategy subclass under ``name``."""
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> type:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@dataclass(eq=False)  # hashable by identity: safe to close over in jit
+class FederatedData:
+    """Client-stacked datasets, device-resident for the whole run.
+
+    ``train_x: (M, R, ...)``, ``train_y: (M, R)``; test likewise (the test
+    leading dim may differ from M, e.g. the pooled-data centralized baseline
+    trains on (1, N, ...) but reports per-client test accuracy).
+    """
+    train_x: jnp.ndarray
+    train_y: jnp.ndarray
+    test_x: jnp.ndarray
+    test_y: jnp.ndarray
+
+    def __post_init__(self):
+        self.train_x = jnp.asarray(self.train_x)
+        self.train_y = jnp.asarray(self.train_y)
+        self.test_x = jnp.asarray(self.test_x)
+        self.test_y = jnp.asarray(self.test_y)
+
+    @property
+    def num_clients(self) -> int:
+        return self.train_y.shape[0]
+
+    @property
+    def samples_per_client(self) -> int:
+        return self.train_y.shape[1]
+
+
+@dataclass(eq=False)
+class Strategy:
+    """Base class for federated methods run by the engine.
+
+    State is an arbitrary pytree owned by the strategy (stacked client
+    params, plus any method state: control variates, gradient trackers, ...).
+    All hooks except ``init`` are traced into the engine's scanned round body,
+    so they must be jit-compatible; the round index ``r`` and all keys arrive
+    as traced scalars.
+    """
+
+    # plain class attribute (NOT a dataclass field): register_strategy
+    # overrides it per subclass and instances resolve it through the class
+    name = "base"
+    # engine chunk-cache invalidation: the compiled round chunks close over
+    # the strategy, so any host-side attribute change that alters the traced
+    # computation (e.g. P4Strategy.set_groups) MUST bump this counter
+    cache_token = 0
+
+    # ------------------------------------------------------------------ hooks
+    def init(self, key, data: FederatedData, batch_size: Optional[int]):
+        """Build the initial state pytree (host-side, before tracing)."""
+        raise NotImplementedError
+
+    def local_update(self, state, xs, ys, r, key):
+        """One round of local training on the sampled batches.
+
+        Returns ``(state, metrics)`` where metrics is a (possibly empty) dict
+        of scalars with a structure that is identical every round.
+        """
+        raise NotImplementedError
+
+    def aggregate(self, state, r, key):
+        """Communication/aggregation step after local updates (identity by
+        default — e.g. the local-training baseline never communicates)."""
+        return state
+
+    def eval_params(self, state):
+        """Stacked (M_test, ...) per-client parameters to evaluate."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------------- derived
+    def evaluate(self, state, test_x, test_y):
+        """(M,) per-client test accuracy; override for non-stacked methods."""
+        from repro.core.small_models import accuracy
+        params = self.eval_params(state)
+        return jax.vmap(lambda p, x, y: accuracy(self.apply_fn(p, x), y))(
+            params, test_x, test_y)
+
+    # ------------------------------------------------------- optional hooks
+    def log_communication(self, net, state, r: int) -> None:
+        """Record the round's messages on a P2PNetwork (host-side, called by
+        the engine at eval boundaries for each elapsed round)."""
+
+    def state_to_save(self, state):
+        """Pytree persisted by the engine's checkpoint hook."""
+        return state

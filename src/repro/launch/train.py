@@ -84,12 +84,13 @@ def main():
                          (args.batch, args.seq, cfg.audio_codebooks)), jnp.int32)}
         if g is not None:
             batch = jax.tree_util.tree_map(
-                lambda t: jnp.stack([t] * 0 + [t for _ in range(g)]) if False else
-                jnp.broadcast_to(t[None], (g,) + t.shape), batch)
+                lambda t: jnp.broadcast_to(t[None], (g,) + t.shape), batch)
         return batch
 
     if args.p4:
         from repro.core.p4 import make_p4_lm_step
+        from repro.data.tokens import synth_token_batch_device
+        from repro.engine import make_scan_steps
         from repro.optim import make_optimizer
         G = args.groups
         step = make_p4_lm_step(api, api, train_cfg,
@@ -103,15 +104,35 @@ def main():
         params = {"private": stack_init(key), "proxy": stack_init(jax.random.fold_in(key, 1))}
         opt_states = {"private": jax.vmap(opt.init)(params["private"]),
                       "proxy": jax.vmap(opt.init)(params["proxy"])}
-        step = jax.jit(step)
-        for i in range(args.steps):
-            batch = make_batch(g=G)
+
+        # engine scan loop: the batch (tokens + any vlm frontend fields) is
+        # drawn inside the trace, log_every steps per XLA call, the
+        # (params, opt_states) carry donated
+        def device_batch(k, i):
+            k1, k2 = jax.random.split(k)
+            batch = {"tokens": synth_token_batch_device(k1, args.batch,
+                                                        args.seq, cfg.vocab_size)}
+            if cfg.family == "vlm":
+                from repro.models.frontends import (synth_mrope_positions,
+                                                    synth_vision_embeds)
+                batch["vision_embeds"] = synth_vision_embeds(k2, cfg, args.batch)
+                batch["mrope_positions"] = synth_mrope_positions(cfg, args.batch,
+                                                                 args.seq)
+            return jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(t[None], (G,) + t.shape), batch)
+
+        chunk = max(1, min(args.log_every, args.steps))
+        scans = {chunk: make_scan_steps(step, device_batch, chunk)}
+        i = 0
+        while i < args.steps:
+            length = min(chunk, args.steps - i)
+            if length not in scans:
+                scans[length] = make_scan_steps(step, device_batch, length)
             t0 = time.time()
-            params, opt_states, metrics = step(params, opt_states, batch,
-                                               jax.random.fold_in(key, i))
-            if i % args.log_every == 0:
-                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
-                      f"({time.time()-t0:.2f}s)", flush=True)
+            params, opt_states, losses = scans[length](params, opt_states, key, i)
+            print(f"step {i:4d} loss={float(losses[0]):.4f} "
+                  f"({(time.time()-t0)/length:.2f}s/step)", flush=True)
+            i += length
     else:
         train_step, opt = make_train_step(api, train_cfg)
         opt_state = opt.init(params)

@@ -1,0 +1,241 @@
+"""Unified federation engine: scan-loop fidelity, strategy registry, the
+rotating-aggregator schedule, engine-integrated P2P byte accounting, and the
+same-seed smoke comparison against pre-refactor trainer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import dp_dsgt, fedavg, local
+from repro.baselines.local import LocalStrategy
+from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+from repro.core.p2p import (P2PNetwork, aggregator_for_round,
+                            simulate_group_round, simulate_phase1)
+from repro.core.p4 import P4Trainer
+from repro.engine import (Engine, FederatedData, available_strategies,
+                          eval_rounds, get_strategy, sample_client_batches)
+
+
+# ---------------------------------------------------------------------------
+# fixtures (identical to the pre-refactor test fixtures — the reference
+# accuracies below were recorded on these exact arrays before the port)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    M, feat, classes, n = 6, 16, 3, 48
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    xs, ys = [], []
+    for c in range(M):
+        y = rng.integers(0, classes, n)
+        x = protos[y] + rng.normal(size=(n, feat)).astype(np.float32) * 0.4
+        xs.append(x)
+        ys.append(y)
+    X = np.stack(xs)
+    Y = np.stack(ys).astype(np.int32)
+    return X, Y, jnp.asarray(X), jnp.asarray(Y)
+
+
+@pytest.fixture(scope="module")
+def p4_toy():
+    rng = np.random.default_rng(0)
+    M, feat, classes, n = 8, 20, 4, 64
+    protos = rng.normal(size=(2, classes, feat)).astype(np.float32) * 2
+    protos[0, :, feat // 2:] = 0
+    protos[1, :, : feat // 2] = 0
+    xs, ys = [], []
+    for c in range(M):
+        y = rng.integers(0, classes, n)
+        x = protos[c % 2, y] + rng.normal(size=(n, feat)).astype(np.float32) * 0.5
+        xs.append(x)
+        ys.append(y)
+    return np.stack(xs), np.stack(ys).astype(np.int32)
+
+
+def _p4_cfg(rounds=40):
+    return RunConfig(dp=DPConfig(epsilon=15.0, rounds=rounds, sample_rate=0.5,
+                                 clip_norm=1.0),
+                     p4=P4Config(group_size=4, sample_peers=7),
+                     train=TrainConfig(learning_rate=0.5))
+
+
+# ---------------------------------------------------------------------------
+# registry + schedule plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_methods():
+    have = available_strategies()
+    for name in ("p4", "local", "centralized", "fedavg", "scaffold",
+                 "proxyfl", "dp_dsgt"):
+        assert name in have, f"{name} missing from registry {have}"
+    assert get_strategy("local") is LocalStrategy
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+
+
+def test_eval_rounds_matches_legacy_cadence():
+    # legacy loops evaluated when r % eval_every == 0 or r == rounds - 1
+    for start, rounds, every in [(0, 100, 20), (4, 40, 39), (0, 25, 24),
+                                 (4, 100, 20), (0, 1, 20)]:
+        legacy = [r for r in range(start, rounds)
+                  if r % every == 0 or r == rounds - 1]
+        assert eval_rounds(start, rounds, every) == legacy, (start, rounds, every)
+
+
+def test_sample_client_batches_shapes_and_full_batch(key):
+    tx = jnp.arange(2 * 10 * 3, dtype=jnp.float32).reshape(2, 10, 3)
+    ty = jnp.tile(jnp.arange(10), (2, 1))
+    xs, ys = sample_client_batches(tx, ty, key, 4)
+    assert xs.shape == (2, 4, 3) and ys.shape == (2, 4)
+    # label/features drawn with the SAME index (paired gather)
+    np.testing.assert_allclose(np.asarray(xs[..., 0]) // 3 % 10, np.asarray(ys))
+    fx, fy = sample_client_batches(tx, ty, key, None)
+    assert fx is tx and fy is ty
+
+
+# ---------------------------------------------------------------------------
+# scan-loop fidelity: the chunked lax.scan is bit-identical to a Python
+# per-round loop driving the same strategy hooks with the same fold_in keys
+# ---------------------------------------------------------------------------
+
+def test_scan_loop_matches_python_loop(toy, key):
+    X, Y, tx, ty = toy
+    strategy = LocalStrategy(feat_dim=16, num_classes=3, lr=0.5)
+    data = FederatedData(X, Y, tx, ty)
+    engine = Engine(strategy, eval_every=7)
+    state, hist = engine.fit(data, rounds=20, key=key, batch_size=8)
+
+    # reference: python loop reproducing the engine's key derivation
+    init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+    ref = strategy.init(init_key, data, 8)
+    for r in range(20):
+        rk = jax.random.fold_in(phase_key, r)
+        xs, ys = sample_client_batches(data.train_x, data.train_y,
+                                       jax.random.fold_in(rk, 0), 8)
+        ref, _ = strategy.local_update(ref, xs, ys, r, jax.random.fold_in(rk, 1))
+        ref = strategy.aggregate(ref, r, jax.random.fold_in(rk, 2))
+
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+    assert hist.rounds == [0, 7, 14, 19]
+
+
+# ---------------------------------------------------------------------------
+# same-seed smoke vs pre-refactor trainers (references recorded on the seed
+# commit with these exact fixtures/seeds before the bespoke loops were
+# deleted; RNG streams changed host-numpy -> jax.random, so equivalence is
+# statistical: same final accuracy on the easy task, same sigma calibration)
+# ---------------------------------------------------------------------------
+
+def test_fedavg_matches_pre_refactor(toy):
+    X, Y, tx, ty = toy
+    _, hist, sigma = fedavg.train(X, Y, tx, ty, rounds=25, lr=0.5,
+                                  batch_size=16, epsilon=15.0, eval_every=24)
+    assert abs(sigma - 0.72096) < 1e-4   # accounting unchanged by the port
+    assert abs(hist[-1][1] - 1.0) < 0.02  # pre-refactor final acc: 1.0
+
+
+def test_dp_dsgt_matches_pre_refactor(toy):
+    X, Y, tx, ty = toy
+    _, hist, sigma = dp_dsgt.train(X, Y, tx, ty, rounds=25, lr=0.3,
+                                   batch_size=16, epsilon=15.0, eval_every=24)
+    assert abs(sigma - 0.66226) < 1e-4
+    assert abs(hist[-1][1] - 1.0) < 0.02  # pre-refactor final acc: 1.0
+
+
+def test_p4_matches_pre_refactor(p4_toy):
+    xs, ys = p4_toy
+    trainer = P4Trainer(feat_dim=20, num_classes=4, cfg=_p4_cfg())
+    _, groups, hist = trainer.fit(xs, ys, jnp.asarray(xs), jnp.asarray(ys),
+                                  rounds=40, eval_every=39)
+    # pre-refactor: final acc 1.0, groups split exactly along the 2 tasks
+    assert abs(hist[-1][1] - 1.0) < 0.02
+    for g in groups:
+        assert len({i % 2 for i in g}) == 1, groups
+
+
+# ---------------------------------------------------------------------------
+# rotating-aggregator schedule + engine-integrated byte accounting
+# ---------------------------------------------------------------------------
+
+def test_rotating_aggregator_schedule():
+    group = [3, 5, 8]
+    # rotation=1: advances round-robin every round
+    assert [aggregator_for_round(group, r, 1) for r in range(6)] == \
+        [3, 5, 8, 3, 5, 8]
+    # rotation=2: each member aggregates for 2 consecutive rounds
+    assert [aggregator_for_round(group, r, 2) for r in range(6)] == \
+        [3, 3, 5, 5, 8, 8]
+    # rotation=0 is clamped to 1 (no div-by-zero)
+    assert aggregator_for_round(group, 4, 0) == 5
+
+
+def test_engine_byte_accounting_matches_simulate_group_round(p4_toy):
+    xs, ys = p4_toy
+    rounds, nb = 8, 4
+    net = P2PNetwork(8)
+    trainer = P4Trainer(feat_dim=20, num_classes=4, cfg=_p4_cfg(rounds))
+    states, groups, _ = trainer.fit(xs, ys, jnp.asarray(xs), jnp.asarray(ys),
+                                    rounds=rounds, eval_every=rounds - 1,
+                                    bootstrap_rounds=nb, network=net)
+
+    # reference: drive simulate_group_round directly for the same groups and
+    # co-training rounds with a per-client proxy payload
+    ref = P2PNetwork(8)
+    for r in range(nb, rounds):
+        for g in groups:
+            payload = jax.tree_util.tree_map(lambda t: t[g[0]], states["proxy"])
+            simulate_group_round(ref, g, payload, rnd=r, rotation=1)
+
+    assert net.num_messages() == ref.num_messages() > 0
+    assert net.total_bytes() == ref.total_bytes()
+    for kind in ("proxy_update", "aggregated_model"):
+        assert net.num_messages(kind) == ref.num_messages(kind)
+        assert net.total_bytes(kind) == ref.total_bytes(kind)
+    # per-message payload is ONE client's proxy (not the M-stacked tree)
+    per_msg = net.total_bytes("proxy_update") / net.num_messages("proxy_update")
+    single = len(__import__("pickle").dumps(
+        jax.tree_util.tree_map(np.asarray, jax.tree_util.tree_map(
+            lambda t: t[0], states["proxy"])), protocol=4))
+    assert abs(per_msg - single) < 0.1 * single
+
+
+def test_phase1_sends_own_slice_only(key):
+    M, D = 4, 32
+    stacked = {"w": jax.random.normal(key, (M, D))}
+    net = P2PNetwork(M)
+    simulate_phase1(net, stacked, [(0, 1), (2, 3)])
+    assert net.num_messages("phase1_weights") == 2
+    # each message carries ONE client's (D,) slice — well under the stacked size
+    import pickle
+    single = len(pickle.dumps({"w": np.asarray(stacked["w"][0])}, protocol=4))
+    full = len(pickle.dumps({"w": np.asarray(stacked["w"])}, protocol=4))
+    per_msg = net.total_bytes("phase1_weights") / 2
+    assert per_msg < full / 2
+    assert abs(per_msg - single) < 0.25 * single
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hook: save at eval points, resume from the latest round
+# ---------------------------------------------------------------------------
+
+def test_engine_checkpoint_resume(toy, key, tmp_path):
+    X, Y, tx, ty = toy
+    data = FederatedData(X, Y, tx, ty)
+    strategy = LocalStrategy(feat_dim=16, num_classes=3, lr=0.5)
+    engine = Engine(strategy, eval_every=5, checkpoint_dir=str(tmp_path))
+    state, hist = engine.fit(data, rounds=10, key=key, batch_size=8)
+    assert hist.rounds == [0, 5, 9]
+
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 9
+
+    resumed = Engine(LocalStrategy(feat_dim=16, num_classes=3, lr=0.5),
+                     eval_every=5, checkpoint_dir=str(tmp_path))
+    state2, hist2 = resumed.fit(data, rounds=20, key=key, batch_size=8,
+                                resume=True)
+    assert hist2.rounds == [10, 15, 19]  # continued, not restarted
+    assert hist2.accuracy[-1] > 0.7
