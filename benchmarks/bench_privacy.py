@@ -46,8 +46,11 @@ def run(quick: bool = True, dataset: str = "femnist"):
                                 eval_every=max(rounds - 1, 1), batch_size=batch)
         rows.append((f"privacy_p4_eps{eps}", t.dt * 1e6 / rounds,
                      round(hist[-1][1], 4)))
-        print(f"[privacy] eps={eps} p4={hist[-1][1]:.3f} sigma={tr.sigma:.2f}",
-              flush=True)
+        # the RDP-accounted spend of the Eq. 12 sigma, read from the engine's
+        # ledger record rather than recomputed here
+        spent = hist.metrics.get("dp_epsilon", [float("nan")])[-1]
+        print(f"[privacy] eps={eps} p4={hist[-1][1]:.3f} sigma={tr.sigma:.2f} "
+              f"rdp_spent={spent:.2f}", flush=True)
     print(f"[privacy] local_hc={rows[0][2]} local_raw={rows[1][2]}")
     return rows
 

@@ -1,0 +1,97 @@
+"""Round-schedule throughput: rounds/sec of the scheduled engine loop vs the
+PR-2 full-participation body (ISSUE 3 acceptance).
+
+ClientSampling keeps the scan device-resident — the mask draw, the two
+participation merges, and the masked aggregation are the only ops added to
+the PR-2 body, so q ∈ {1.0, 0.5, 0.1} should all land within noise of the
+baseline (the simulation trains all M clients and masks the merge; the win
+from sampling is privacy amplification, not FLOPs). AsyncStaleness skips
+aggregation on non-boundary rounds. Writes ``BENCH_schedule.json`` via
+``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.local import LocalStrategy
+from repro.engine import (AsyncStaleness, ClientSampling, Engine,
+                          FederatedData, FullParticipation)
+
+LAST_RECORDS = []
+
+
+def _make_data(M: int, R: int, feat: int, classes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, R))
+    xs = protos[ys] + rng.normal(size=(M, R, feat)).astype(np.float32) * 0.4
+    return xs, ys.astype(np.int32)
+
+
+class _AvgStrategy(LocalStrategy):
+    """Local training + a full-mean aggregate so AsyncStaleness has work to
+    skip (LocalStrategy's aggregate is the identity)."""
+
+    def aggregate(self, params, r, key):
+        mean = jax.tree_util.tree_map(lambda t: jnp.mean(t, 0), params)
+        M = jax.tree_util.tree_leaves(params)[0].shape[0]
+        return jax.tree_util.tree_map(
+            lambda m, p: 0.5 * p + 0.5 * jnp.broadcast_to(m[None], p.shape),
+            mean, params)
+
+
+def _loop_rps(schedule, X, Y, rounds: int, batch: int, feat: int,
+              classes: int, seed: int = 0) -> float:
+    strategy = _AvgStrategy(feat_dim=feat, num_classes=classes, lr=0.5)
+    data = FederatedData(X, Y, jnp.asarray(X), jnp.asarray(Y))
+    engine = Engine(strategy, eval_every=rounds, schedule=schedule)
+    key = jax.random.PRNGKey(seed)
+
+    def run():
+        state, _ = engine.fit(data, rounds=rounds, key=key, batch_size=batch,
+                              evaluate=False)
+        jax.tree_util.tree_leaves(state)[0].block_until_ready()
+
+    run()                                 # compile the chunk once
+    t0 = time.perf_counter()
+    run()
+    return rounds / (time.perf_counter() - t0)
+
+
+def run(quick: bool = True):
+    rows = []
+    LAST_RECORDS.clear()
+    M, R, feat, classes = (16, 96, 64, 10) if quick else (32, 160, 15552, 10)
+    rounds = 100 if quick else 200
+    batch = 24
+    X, Y = _make_data(M, R, feat, classes)
+
+    schedules = [
+        ("pr2_full", FullParticipation()),
+        ("sampling_q1.0", ClientSampling(q=1.0)),
+        ("sampling_q0.5", ClientSampling(q=0.5)),
+        ("sampling_q0.1", ClientSampling(q=0.1)),
+        ("async_s4", AsyncStaleness(staleness=4)),
+    ]
+    base_rps = None
+    for name, sched in schedules:
+        rps = _loop_rps(sched, X, Y, rounds, batch, feat, classes)
+        if base_rps is None:
+            base_rps = rps
+        rows.append((f"schedule_{name}_rps", 1e6 / rps, round(rps, 1)))
+        LAST_RECORDS.append({"name": name, "rounds_per_sec": round(rps, 2),
+                             "vs_pr2": round(rps / base_rps, 3),
+                             "M": M, "R": R, "feat": feat, "rounds": rounds,
+                             "batch": batch})
+        print(f"[schedule] {name}: {rps:.1f} r/s ({rps / base_rps:.2f}x PR-2)",
+              flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -7,6 +7,7 @@
   bench_roofline       §Roofline       dry-run-derived terms per combo
   bench_kernels        (framework)     Pallas-vs-oracle microbench
   bench_engine         (framework)     scan round loop vs legacy Python loop
+  bench_schedule       (framework)     round schedules vs the PR-2 loop
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
 Suites exposing ``LAST_RECORDS`` also write ``BENCH_<suite>.json``.
@@ -35,10 +36,11 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
                             bench_kernels, bench_overhead, bench_privacy,
-                            bench_roofline)
+                            bench_roofline, bench_schedule)
     suites = {
         "kernels": bench_kernels,
         "engine": bench_engine,
+        "schedule": bench_schedule,
         "overhead": bench_overhead,
         "roofline": bench_roofline,
         "privacy": bench_privacy,

@@ -45,14 +45,16 @@ class CentralizedStrategy(Strategy):
 
 
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
-          batch_size: int = 256, seed: int = 0, eval_every: int = 20):
+          batch_size: int = 256, seed: int = 0, eval_every: int = 20,
+          schedule=None):
     """train_x: pooled (N, feat); test per-client (M, n, feat) so we report the
     same per-client-mean accuracy metric as every other method."""
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     strategy = CentralizedStrategy(feat_dim=feat, num_classes=classes, lr=lr)
     data = FederatedData(jnp.asarray(train_x)[None], jnp.asarray(train_y)[None],
                          test_x, test_y)
-    state, hist = Engine(strategy, eval_every=eval_every).fit(
+    state, hist = Engine(strategy, eval_every=eval_every,
+                         schedule=schedule).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
-    return state, hist.as_tuples()
+    return state, hist

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
-from repro.engine import (Engine, FederatedData, Strategy, register_strategy,
+from repro.engine import (Engine, FederatedData, FullParticipation,
+                          PrivacyLedger, Strategy, register_strategy,
                           sample_client_batches)
 
 
@@ -82,17 +83,24 @@ class DPDSGTStrategy(Strategy):
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.3,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
-          dp: bool = True):
-    R = train_y.shape[1]
+          dp: bool = True, schedule=None):
+    M, R = train_y.shape[:2]
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
+    schedule = schedule or FullParticipation()
     sigma = (dp_lib.noble_sigma(epsilon, delta, sample_rate=batch_size / R,
                                 rounds=rounds) if dp else 0.0)
+    # σ stays Eq. 12 (Noble); the ledger reports the RDP-accounted spend it
+    # actually induces (amplified by the schedule's client fraction)
+    ledger = (PrivacyLedger(sigma=sigma, delta=delta, sample_rate=batch_size / R,
+                            client_rate=schedule.client_fraction(M))
+              if dp else None)
 
     strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=lr,
                               clip=clip, sigma=sigma if dp else 0.0)
     data = FederatedData(train_x, train_y, test_x, test_y)
-    state, hist = Engine(strategy, eval_every=eval_every).fit(
+    state, hist = Engine(strategy, eval_every=eval_every, schedule=schedule,
+                         ledger=ledger).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
-    return state["x"], hist.as_tuples(), sigma
+    return state["x"], hist, sigma

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
-from repro.engine import Engine, FederatedData, Strategy, register_strategy
+from repro.engine import (Engine, FederatedData, FullParticipation,
+                          PrivacyLedger, Strategy, register_strategy)
 
 
 @register_strategy("fedavg")
@@ -54,12 +55,26 @@ class FedAvgStrategy(Strategy):
         return jax.vmap(one)(params, xs, ys, jax.random.split(key, M)), {}
 
     def aggregate(self, clients, r, key):
+        """Strategy-level user sampling (the pre-schedule path; NOT
+        amplification-accounted — prefer an engine ClientSampling schedule
+        for that). The empty draw falls back to one random participant so
+        the global model is always defined."""
         M = jax.tree_util.tree_leaves(clients)[0].shape[0]
         k1, k2 = jax.random.split(key)
         mask = (jax.random.uniform(k1, (M,)) < self.user_ratio).astype(jnp.float32)
-        # empty cohort → fall back to one random participant
         fallback = jnp.zeros((M,)).at[jax.random.randint(k2, (), 0, M)].set(1.0)
         mask = jnp.where(jnp.sum(mask) > 0, mask, fallback)
+        return self.aggregate_masked(clients, r, key, mask)
+
+    def merge_participation(self, prev_state, new_state, mask):
+        # server-style state: the cohort is applied as aggregation weights,
+        # nothing to freeze per client
+        return new_state
+
+    def aggregate_masked(self, clients, r, key, mask):
+        """Engine-drawn cohort replaces the strategy's own user sampling:
+        the global model is the cohort-weighted mean (the schedule guarantees
+        a non-empty cohort)."""
         w = mask / jnp.maximum(jnp.sum(mask), 1.0)
         return jax.tree_util.tree_map(
             lambda n: jnp.einsum("m...,m->...", n, w), clients)
@@ -75,18 +90,29 @@ class FedAvgStrategy(Strategy):
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
-          user_ratio: float = 1.0, local_steps: int = 1, dp: bool = True):
-    R = train_y.shape[1]
+          user_ratio: float = 1.0, local_steps: int = 1, dp: bool = True,
+          schedule=None):
+    """``schedule`` (a RoundSchedule) moves user sampling into the engine;
+    σ is then RDP-calibrated at the amplified rate q_batch · q_client, and the
+    returned ``History.metrics`` carries the cumulative (ε, δ) per eval round."""
+    M, R = train_y.shape[:2]
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
+    schedule = schedule or FullParticipation()
     q = batch_size / R
-    sigma = dp_lib.calibrate_sigma(epsilon, delta, q, rounds * local_steps) if dp else 0.0
+    q_eff = q * schedule.client_fraction(M)
+    sigma = (dp_lib.calibrate_sigma(epsilon, delta, q_eff, rounds * local_steps)
+             if dp else 0.0)
+    ledger = (PrivacyLedger(sigma=sigma, delta=delta, sample_rate=q,
+                            client_rate=schedule.client_fraction(M),
+                            local_steps=local_steps) if dp else None)
 
     strategy = FedAvgStrategy(feat_dim=feat, num_classes=classes, lr=lr,
                               clip=clip, sigma=sigma, local_steps=local_steps,
                               user_ratio=user_ratio)
     data = FederatedData(train_x, train_y, test_x, test_y)
-    state, hist = Engine(strategy, eval_every=eval_every).fit(
+    state, hist = Engine(strategy, eval_every=eval_every, schedule=schedule,
+                         ledger=ledger).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
-    return state, hist.as_tuples(), sigma
+    return state, hist, sigma

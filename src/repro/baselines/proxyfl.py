@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.baselines import common
 from repro.core import distill, dp as dp_lib
-from repro.engine import Engine, FederatedData, Strategy, register_strategy
+from repro.engine import (Engine, FederatedData, FullParticipation,
+                          PrivacyLedger, Strategy, register_strategy)
 
 
 @register_strategy("proxyfl")
@@ -88,17 +89,23 @@ class ProxyFLStrategy(Strategy):
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
-          alpha: float = 0.5, beta: float = 0.5, dp: bool = True):
-    R = train_y.shape[1]
+          alpha: float = 0.5, beta: float = 0.5, dp: bool = True,
+          schedule=None):
+    M, R = train_y.shape[:2]
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
+    schedule = schedule or FullParticipation()
     sigma = (dp_lib.noble_sigma(epsilon, delta, sample_rate=batch_size / R,
                                 rounds=rounds, local_steps=1) if dp else 0.0)
+    ledger = (PrivacyLedger(sigma=sigma, delta=delta, sample_rate=batch_size / R,
+                            client_rate=schedule.client_fraction(M))
+              if dp else None)
 
     strategy = ProxyFLStrategy(feat_dim=feat, num_classes=classes, lr=lr,
                                clip=clip, sigma=sigma, alpha=alpha, beta=beta)
     data = FederatedData(train_x, train_y, test_x, test_y)
-    state, hist = Engine(strategy, eval_every=eval_every).fit(
+    state, hist = Engine(strategy, eval_every=eval_every, schedule=schedule,
+                         ledger=ledger).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
-    return state["private"], hist.as_tuples(), sigma
+    return state["private"], hist, sigma

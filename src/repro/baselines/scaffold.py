@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
-from repro.engine import Engine, FederatedData, Strategy, register_strategy
+from repro.engine import (Engine, FederatedData, FullParticipation,
+                          PrivacyLedger, Strategy, register_strategy)
 
 
 @register_strategy("scaffold")
@@ -71,6 +72,24 @@ class ScaffoldStrategy(Strategy):
                 "c_global": common.tree_mean(mid["c_clients"]),
                 "c_clients": mid["c_clients"]}
 
+    def merge_participation(self, prev_state, new_state, mask):
+        """Absent clients keep their control variate; the global quantities
+        are cohort-weighted in ``aggregate_masked``."""
+        sel = lambda o, n: jnp.where(
+            mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o)
+        out = dict(new_state)
+        out["c_clients"] = jax.tree_util.tree_map(
+            sel, prev_state["c_clients"], new_state["c_clients"])
+        return out
+
+    def aggregate_masked(self, mid, r, key, mask):
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        wmean = lambda stacked: jax.tree_util.tree_map(
+            lambda t: jnp.einsum("m...,m->...", t, w), stacked)
+        return {"global": wmean(mid["clients"]),
+                "c_global": wmean(mid["c_clients"]),
+                "c_clients": mid["c_clients"]}
+
     def eval_params(self, state):
         return state["global"]
 
@@ -82,17 +101,24 @@ class ScaffoldStrategy(Strategy):
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.5,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
-          local_steps: int = 2, dp: bool = True):
-    R = train_y.shape[1]
+          local_steps: int = 2, dp: bool = True, schedule=None):
+    M, R = train_y.shape[:2]
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
+    schedule = schedule or FullParticipation()
     q = batch_size / R
-    sigma = dp_lib.calibrate_sigma(epsilon, delta, q, rounds * local_steps) if dp else 0.0
+    q_eff = q * schedule.client_fraction(M)
+    sigma = (dp_lib.calibrate_sigma(epsilon, delta, q_eff, rounds * local_steps)
+             if dp else 0.0)
+    ledger = (PrivacyLedger(sigma=sigma, delta=delta, sample_rate=q,
+                            client_rate=schedule.client_fraction(M),
+                            local_steps=local_steps) if dp else None)
 
     strategy = ScaffoldStrategy(feat_dim=feat, num_classes=classes, lr=lr,
                                 clip=clip, sigma=sigma, local_steps=local_steps)
     data = FederatedData(train_x, train_y, test_x, test_y)
-    state, hist = Engine(strategy, eval_every=eval_every).fit(
+    state, hist = Engine(strategy, eval_every=eval_every, schedule=schedule,
+                         ledger=ledger).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
-    return state["global"], hist.as_tuples(), sigma
+    return state["global"], hist, sigma

@@ -6,6 +6,7 @@ Everything a run needs is described by frozen dataclasses:
   DPConfig     — differential-privacy knobs (paper Eqs. 10–12)
   P4Config     — the paper's technique: grouping + proxy/private co-training
   MeshConfig   — device mesh (single-pod / multi-pod)
+  ScheduleConfig — round schedule (full / sampling / async) + DP accounting
   KernelConfig — Pallas/jnp kernel backend selection + autotuning
   TrainConfig  — optimizer/schedule/steps
   RunConfig    — the composed top-level config consumed by launch scripts
@@ -161,6 +162,18 @@ class P4Config:
 
 
 @dataclass(frozen=True)
+class ScheduleConfig:
+    """Round schedule + engine-native privacy accounting
+    (``repro.engine.schedule`` / ``repro.engine.accounting``)."""
+    kind: str = "full"              # full | sampling | async
+    client_rate: float = 1.0        # q — per-round client participation
+    mode: str = "bernoulli"         # sampling: bernoulli | fixed cohort
+    staleness: int = 0              # async: rounds between buffered merges
+    staleness_pow: float = 0.5      # async: merge weight (1+s)^-pow (FedBuff)
+    accountant: str = "rdp"         # rdp | none — (ε, δ) ledger into History
+
+
+@dataclass(frozen=True)
 class KernelConfig:
     """Kernel backend selection + autotuning (repro.kernels.dispatch).
 
@@ -241,6 +254,7 @@ class RunConfig:
     dp: DPConfig = field(default_factory=DPConfig)
     p4: P4Config = field(default_factory=P4Config)
     kernels: KernelConfig = field(default_factory=KernelConfig)
+    schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
 
 
 # ---------------------------------------------------------------------------

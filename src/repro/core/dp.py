@@ -76,10 +76,13 @@ def noble_sigma(epsilon: float, delta: float, *, sample_rate: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
-# RDP accountant (subsampled Gaussian) — for the centralized baselines
+# RDP accountant (subsampled Gaussian) — closed form here; the stateful
+# multi-segment ledger built on rdp_increment/rdp_to_epsilon lives in
+# repro.engine.accounting.PrivacyLedger
 # ---------------------------------------------------------------------------
 
 _ORDERS = tuple([1.5, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 128])
+RDP_ORDERS = _ORDERS
 
 
 def _rdp_gaussian(sigma: float, alpha: float) -> float:
@@ -108,19 +111,32 @@ def _rdp_subsampled(q: float, sigma: float, alpha: int) -> float:
     return total / (alpha - 1)
 
 
+def rdp_increment(q: float, sigma: float, alpha: float) -> float:
+    """Per-step RDP of the subsampled Gaussian at order ``alpha``.
+
+    Additive across steps and across segments with different q — the unit
+    the PrivacyLedger accumulates. Orders unusable under subsampling (the
+    computable bound needs integer α ≥ 2 when q < 1) return ``inf`` so they
+    drop out of the min without special-casing at the call site."""
+    if q >= 1.0:
+        return _rdp_gaussian(sigma, alpha)
+    if alpha == int(alpha) and alpha >= 2:
+        return _rdp_subsampled(q, sigma, int(alpha))
+    return math.inf
+
+
+def rdp_to_epsilon(rdp: float, alpha: float, delta: float) -> float:
+    """RDP(α) → (ε, δ)-DP via the Balle et al. / Canonne conversion."""
+    if not math.isfinite(rdp):
+        return math.inf
+    return rdp + math.log1p(-1.0 / alpha) - math.log(delta * alpha) / (alpha - 1)
+
+
 def rdp_epsilon(sigma: float, q: float, steps: int, delta: float) -> float:
     """(ε, δ)-DP of ``steps`` compositions of the subsampled Gaussian."""
-    best = float("inf")
-    for alpha in _ORDERS:
-        if alpha == int(alpha) and alpha >= 2:
-            rdp = steps * _rdp_subsampled(q, sigma, int(alpha))
-        else:
-            if q < 1.0:
-                continue
-            rdp = steps * _rdp_gaussian(sigma, alpha)
-        eps = rdp + math.log1p(-1.0 / alpha) - math.log(delta * alpha) / (alpha - 1)
-        best = min(best, eps)
-    return best
+    return min(rdp_to_epsilon(steps * rdp_increment(q, sigma, alpha),
+                              alpha, delta)
+               for alpha in _ORDERS)
 
 
 def calibrate_sigma(target_eps: float, delta: float, q: float, steps: int,

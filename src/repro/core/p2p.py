@@ -27,6 +27,7 @@ class Message:
     dst: int
     kind: str
     nbytes: int
+    rnd: int = -1      # round the message belongs to; -1 = not round-stamped
 
 
 @dataclass
@@ -34,11 +35,12 @@ class P2PNetwork:
     num_clients: int
     log: List[Message] = field(default_factory=list)
 
-    def send(self, src: int, dst: int, payload: Any, kind: str) -> int:
+    def send(self, src: int, dst: int, payload: Any, kind: str,
+             rnd: int = -1) -> int:
         """Serialize exactly as the paper (pickle of numpy weights)."""
         host = jax.tree_util.tree_map(np.asarray, payload)
         nbytes = len(pickle.dumps(host, protocol=4))
-        self.log.append(Message(src, dst, kind, nbytes))
+        self.log.append(Message(src, dst, kind, nbytes, rnd))
         return nbytes
 
     def total_bytes(self, kind: str | None = None) -> int:
@@ -61,10 +63,10 @@ def simulate_group_round(net: P2PNetwork, group: List[int], proxy_params,
     agg = aggregator_for_round(group, rnd, rotation)
     for i in group:
         if i != agg:
-            net.send(i, agg, proxy_params, "proxy_update")
+            net.send(i, agg, proxy_params, "proxy_update", rnd=rnd)
     for i in group:
         if i != agg:
-            net.send(agg, i, proxy_params, "aggregated_model")
+            net.send(agg, i, proxy_params, "aggregated_model", rnd=rnd)
     return {"aggregator": agg, "messages": 2 * (len(group) - 1)}
 
 

@@ -26,7 +26,8 @@ from repro.core import distill, dp as dp_lib
 from repro.core.grouping import (flatten_clients, greedy_group_formation,
                                  group_ids, pairwise_l1, random_groups)
 from repro.core.small_models import accuracy, linear_apply, linear_specs, make_cnn
-from repro.engine import Engine, FederatedData, Strategy, register_strategy
+from repro.engine import (Engine, FederatedData, PrivacyLedger, Strategy,
+                          make_schedule, register_strategy)
 from repro.models.module import init_params
 
 
@@ -39,6 +40,22 @@ def group_mean(stacked_tree, ids: jnp.ndarray, num_groups: int):
         sums = jax.ops.segment_sum(x, ids, num_groups)
         mean = sums / counts.reshape((-1,) + (1,) * (x.ndim - 1))
         return mean[ids].astype(x.dtype)
+
+    return jax.tree_util.tree_map(f, stacked_tree)
+
+
+def masked_group_mean(stacked_tree, ids: jnp.ndarray, num_groups: int, mask):
+    """Group mean over the participating cohort only: absent members neither
+    contribute to nor receive their group's mean (their slot keeps its own
+    value). A group with no present members is left untouched."""
+    counts = jax.ops.segment_sum(mask, ids, num_groups)
+
+    def f(x):
+        w = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        sums = jax.ops.segment_sum(x * w, ids, num_groups)
+        denom = jnp.maximum(counts, 1.0).reshape((-1,) + (1,) * (x.ndim - 1))
+        mean = (sums / denom)[ids].astype(x.dtype)
+        return jnp.where(w > 0, mean, x)
 
     return jax.tree_util.tree_map(f, stacked_tree)
 
@@ -181,7 +198,7 @@ class P4Trainer:
             key=None, eval_every: int = 20, batch_size: Optional[int] = None,
             groups: Optional[List[List[int]]] = None, seed: int = 0,
             bootstrap_rounds: int = 4, network=None, checkpoint_dir=None,
-            resume: bool = False):
+            resume: bool = False, target_epsilon: Optional[float] = None):
         """Full P4 on the federation engine: a full-batch bootstrap phase
         (no aggregation, no eval), host-side grouping on the DP weights, then
         the co-training phase as one scan-chunked engine run.
@@ -194,7 +211,15 @@ class P4Trainer:
 
         ``network`` (a P2PNetwork) and ``checkpoint_dir`` are forwarded to the
         engine as hooks: §4.5 byte accounting and save/resume come from the
-        same loop as training."""
+        same loop as training.
+
+        The co-train phase runs under ``cfg.schedule``: its RoundSchedule
+        (full / client-sampling / async) and, when DP is on and
+        ``cfg.schedule.accountant == "rdp"``, a PrivacyLedger whose cumulative
+        (ε, δ) is recorded in ``history.metrics`` at every eval round —
+        bootstrap rounds are accounted at q = 1 (full batch, full
+        participation). ``target_epsilon`` calibrates σ against the ledger for
+        the whole run instead of using Eq. 12's σ."""
         rounds = rounds or self.cfg.dp.rounds
         key = key if key is not None else jax.random.PRNGKey(self.cfg.train.seed)
         M, R = train_y.shape
@@ -202,6 +227,24 @@ class P4Trainer:
         data = FederatedData(train_x, train_y, test_x, test_y)
         strategy = P4Strategy(trainer=self)
         nb = max(1, bootstrap_rounds)
+        dpc = self.cfg.dp
+
+        schedule = make_schedule(self.cfg.schedule)
+        ledger = None
+        if dpc.enabled and self.cfg.schedule.accountant == "rdp":
+            ledger = PrivacyLedger(sigma=self.sigma, delta=dpc.delta or 1.0 / R,
+                                   sample_rate=bs / R,
+                                   client_rate=schedule.client_fraction(M),
+                                   local_steps=dpc.local_steps)
+            if target_epsilon is not None:
+                # σ must be live before the bootstrap traces (the strategy
+                # closes over trainer.sigma); the bootstrap segment runs at
+                # q = 1, so calibrate over both segments
+                self.sigma = ledger.calibrate_segments(
+                    target_epsilon, [(nb, 1.0), (rounds - nb, None)])
+        elif target_epsilon is not None:
+            raise ValueError("target_epsilon needs dp.enabled and "
+                             "schedule.accountant='rdp'")
 
         # bootstrap local steps on the FULL local dataset (paper §3.3: weights
         # after first local training; Eq. 11's noise scales with 1/n, so the
@@ -209,12 +252,15 @@ class P4Trainer:
         bootstrap = Engine(strategy, eval_every=eval_every)
         states, _ = bootstrap.fit(data, rounds=nb, key=jax.random.fold_in(key, 0),
                                   batch_size=None, evaluate=False)
+        if ledger is not None:
+            ledger.advance(nb, q=1.0)   # full batch, full participation
         if groups is None:
             groups = self.form_groups(states, seed)
         strategy.set_groups(groups, M)
 
         engine = Engine(strategy, eval_every=eval_every, network=network,
-                        checkpoint_dir=checkpoint_dir)
+                        checkpoint_dir=checkpoint_dir, schedule=schedule,
+                        ledger=ledger)
         states, history = engine.fit(data, rounds=rounds,
                                      key=jax.random.fold_in(key, 1),
                                      batch_size=bs, start_round=nb,
@@ -260,21 +306,43 @@ class P4Strategy(Strategy):
         return {"private": states["private"],
                 "proxy": group_mean(states["proxy"], self.ids, self.num_groups)}
 
+    def aggregate_masked(self, states, r, key, mask):
+        """Partial participation: the group mean runs over the round's cohort
+        only — absent members' proxies are neither read nor overwritten."""
+        if self.ids is None:
+            return states
+        return {"private": states["private"],
+                "proxy": masked_group_mean(states["proxy"], self.ids,
+                                           self.num_groups, mask)}
+
+    def set_sigma(self, sigma: float) -> None:
+        """Target-ε calibration lands on the trainer (its σ is what
+        ``_client_step`` closes over at trace time)."""
+        self.trainer.sigma = float(sigma)
+        self.cache_token += 1
+
     def eval_params(self, states):
         """Per-client PERSONALIZED (private) model."""
         return states["private"]
 
-    def log_communication(self, net, states, r: int) -> None:
+    def log_communication(self, net, states, r: int, mask=None) -> None:
         """§4.5 Phase-2 accounting: members → rotating aggregator → members,
         one per-client proxy payload per message (matches
-        ``p2p.simulate_group_round`` for the same groups — tested)."""
+        ``p2p.simulate_group_round`` for the same groups — tested). Under a
+        sampling schedule only the round's cohort exchanges messages: an
+        absent client contributes zero bytes, and a group with fewer than two
+        present members has nothing to aggregate."""
         if not self.groups:
             return
         from repro.core.p2p import simulate_group_round
         rotation = self.trainer.cfg.p4.aggregator_rotation
         for g in self.groups:
+            present = g if mask is None else [i for i in g if mask[i] > 0]
+            if len(present) < 2:
+                continue
             payload = jax.tree_util.tree_map(lambda t: t[g[0]], states["proxy"])
-            simulate_group_round(net, g, payload, rnd=r, rotation=rotation)
+            simulate_group_round(net, present, payload, rnd=r,
+                                 rotation=rotation)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,13 @@
 """Unified federation engine: one device-resident round loop + a strategy
-registry covering P4 and every baseline (see README §Federation engine)."""
+registry covering P4 and every baseline, with pluggable round schedules
+(full / client-sampling / async) and engine-native DP accounting (see README
+§Federation engine, §Round schedules & privacy accounting)."""
+from repro.engine.accounting import PrivacyLedger
 from repro.engine.loop import (Engine, History, eval_rounds, make_scan_steps,
                                sample_client_batches)
+from repro.engine.schedule import (AsyncStaleness, ClientSampling,
+                                   FullParticipation, RoundSchedule,
+                                   make_schedule)
 from repro.engine.strategy import (FederatedData, Strategy,
                                    available_strategies, get_strategy,
                                    register_strategy)

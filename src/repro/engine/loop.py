@@ -17,6 +17,12 @@ H2D transfer of M×B×D batch data. Here the loop is the fast path:
 Per-round randomness is derived as ``fold_in(phase_key, r)`` — a Python loop
 driving the same round body reproduces the scan bit-for-bit (tested in
 ``tests/test_engine.py``), which is what makes the refactor safe.
+
+The round body itself is owned by a ``RoundSchedule`` (``engine/schedule.py``):
+full participation (the body above, verbatim), client sampling (cohorts drawn
+inside the jit), or staleness-buffered async aggregation. An optional
+``PrivacyLedger`` (``engine/accounting.py``) is advanced per executed chunk
+and its cumulative (ε, δ) lands in ``History.metrics`` at every eval round.
 """
 from __future__ import annotations
 
@@ -25,24 +31,12 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.engine.accounting import PrivacyLedger
+from repro.engine.schedule import (FullParticipation, RoundSchedule,
+                                   sample_client_batches)
 from repro.engine.strategy import FederatedData, Strategy
-
-
-def sample_client_batches(train_x, train_y, key, batch_size: Optional[int]):
-    """Per-client minibatches drawn on device: (M, B, ...), (M, B).
-
-    ``batch_size=None`` means full-batch (returns the stacks unchanged —
-    used by P4's bootstrap phase, which trains on the whole local dataset).
-    """
-    if batch_size is None:
-        return train_x, train_y
-    M, R = train_y.shape
-    idx = jax.random.randint(key, (M, batch_size), 0, R)
-    xs = jnp.take_along_axis(
-        train_x, idx.reshape(idx.shape + (1,) * (train_x.ndim - 2)), axis=1)
-    ys = jnp.take_along_axis(train_y, idx, axis=1)
-    return xs, ys
 
 
 @dataclass
@@ -97,14 +91,23 @@ class Engine:
                         falls out of the same loop as training.
       checkpoint_dir  — save the strategy state at every eval point and
                         resume from the latest checkpoint via ``fit(resume=True)``.
+      schedule        — a ``RoundSchedule`` owning the scanned round body
+                        (default FullParticipation: the PR-2 body, verbatim).
+      ledger          — a ``PrivacyLedger``; advanced per executed chunk, its
+                        cumulative (ε, δ) is recorded in ``History.metrics``
+                        at every eval round.
     """
     strategy: Strategy
     eval_every: int = 20
     network: Optional[Any] = None
     checkpoint_dir: Optional[str] = None
+    schedule: Optional[RoundSchedule] = None
+    ledger: Optional[PrivacyLedger] = None
 
     def __post_init__(self):
-        self._chunk_cache: Dict[Tuple[int, Optional[int]], Any] = {}
+        if self.schedule is None:
+            self.schedule = FullParticipation()
+        self._chunk_cache: Dict[Tuple[int, Optional[int], int], Any] = {}
 
     # ------------------------------------------------------------------
     def _chunk_fn(self, length: int, batch_size: Optional[int]):
@@ -115,19 +118,13 @@ class Engine:
         key_ = (length, batch_size, self.strategy.cache_token)
         if key_ in self._chunk_cache:
             return self._chunk_cache[key_]
-        strategy = self.strategy
+        body = self.schedule.round_body(self.strategy, batch_size)
 
         def run(state, phase_key, train_x, train_y, start):
-            def body(state, r):
-                rk = jax.random.fold_in(phase_key, r)
-                xs, ys = sample_client_batches(
-                    train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
-                state, metrics = strategy.local_update(
-                    state, xs, ys, r, jax.random.fold_in(rk, 1))
-                state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
-                return state, metrics
+            def scan_body(state, r):
+                return body(state, r, phase_key, train_x, train_y)
 
-            return jax.lax.scan(body, state, start + jnp.arange(length))
+            return jax.lax.scan(scan_body, state, start + jnp.arange(length))
 
         fn = jax.jit(run, donate_argnums=0)
         self._chunk_cache[key_] = fn
@@ -136,25 +133,38 @@ class Engine:
     def run_rounds(self, state, data: FederatedData, phase_key, start: int,
                    stop: int, batch_size: Optional[int]):
         """Run rounds [start, stop) as one scanned chunk. Returns
-        (state, metrics) with metrics stacked over the chunk's rounds."""
+        (state, metrics, aux) with metrics/aux stacked over the chunk's
+        rounds; aux carries the (chunk, M) participation masks under a
+        sampling schedule (empty dict otherwise)."""
         if stop <= start:
-            return state, {}
+            return state, {}, {}
         fn = self._chunk_fn(stop - start, batch_size)
-        return fn(state, phase_key, data.train_x, data.train_y,
-                  jnp.asarray(start, jnp.int32))
+        state, (metrics, aux) = fn(state, phase_key, data.train_x,
+                                   data.train_y, jnp.asarray(start, jnp.int32))
+        return state, metrics, aux
 
     # ------------------------------------------------------------------
     def fit(self, data: FederatedData, *, rounds: int, key,
             batch_size: Optional[int] = None, start_round: int = 0,
             state=None, evaluate: bool = True, history: Optional[History] = None,
-            resume: bool = False):
+            resume: bool = False, target_epsilon: Optional[float] = None):
         """Run one phase of training: rounds [start_round, rounds).
 
         ``state=None`` initializes via the strategy. With ``evaluate=False``
         the phase runs as a single chunk with no eval (P4's bootstrap).
+
+        ``target_epsilon`` requests a privacy budget instead of a noise
+        multiplier: the ledger calibrates σ for the phase's rounds at the
+        schedule's effective sampling rate and installs it on the strategy
+        (``set_sigma``) before any chunk is traced.
         """
         strategy = self.strategy
         init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+        if target_epsilon is not None:
+            if self.ledger is None:
+                raise ValueError("target_epsilon requires a PrivacyLedger")
+            strategy.set_sigma(
+                self.ledger.calibrate(target_epsilon, rounds - start_round))
         if state is None:
             state = strategy.init(init_key, data, batch_size)
         history = history if history is not None else History()
@@ -166,35 +176,53 @@ class Engine:
                 saved, step = restore_checkpoint(
                     self.checkpoint_dir, strategy.state_to_save(state), step)
                 state = saved
+                if self.ledger is not None:
+                    # the rounds skipped by the resume were spent by the
+                    # pre-restart run — an accountant that forgot them would
+                    # under-report the release's true (ε, δ)
+                    self.ledger.advance(step + 1 - start_round)
                 start_round = step + 1
 
         boundaries = (eval_rounds(start_round, rounds, self.eval_every)
                       if evaluate else [])
         cursor = start_round
         for ev in boundaries:
-            state, metrics = self.run_rounds(state, data, phase_key, cursor,
-                                             ev + 1, batch_size)
-            self._log_network(state, cursor, ev)
+            state, metrics, aux = self.run_rounds(state, data, phase_key,
+                                                  cursor, ev + 1, batch_size)
+            self._log_network(state, cursor, ev, aux.get("participation"))
+            if self.ledger is not None:
+                self.ledger.advance(ev + 1 - cursor)
             cursor = ev + 1
             acc = strategy.evaluate(state, data.test_x, data.test_y)
             chunk_means = {k: jnp.mean(v) for k, v in (metrics or {}).items()}
+            if "participation" in aux:
+                chunk_means["participation_rate"] = jnp.mean(
+                    aux["participation"])
+            if self.ledger is not None:
+                chunk_means.update(self.ledger.metrics())
             history.record(ev, jnp.mean(acc), chunk_means)
             if self.checkpoint_dir:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(self.checkpoint_dir, ev,
                                 strategy.state_to_save(state))
         if cursor < rounds:  # tail (or the whole phase when evaluate=False)
-            state, _ = self.run_rounds(state, data, phase_key, cursor, rounds,
-                                       batch_size)
-            self._log_network(state, cursor, rounds - 1)
+            state, _, aux = self.run_rounds(state, data, phase_key, cursor,
+                                            rounds, batch_size)
+            self._log_network(state, cursor, rounds - 1,
+                              aux.get("participation"))
+            if self.ledger is not None:
+                self.ledger.advance(rounds - cursor)
         return state, history
 
     # ------------------------------------------------------------------
-    def _log_network(self, state, first_round: int, last_round: int) -> None:
+    def _log_network(self, state, first_round: int, last_round: int,
+                     masks=None) -> None:
         if self.network is None:
             return
-        for r in range(first_round, last_round + 1):
-            self.strategy.log_communication(self.network, state, r)
+        masks = None if masks is None else np.asarray(masks)
+        for i, r in enumerate(range(first_round, last_round + 1)):
+            mask = None if masks is None else masks[i]
+            self.strategy.log_communication(self.network, state, r, mask=mask)
 
 
 # ---------------------------------------------------------------------------

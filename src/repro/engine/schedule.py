@@ -1,0 +1,218 @@
+"""Round schedules: who participates in a round and how updates merge.
+
+The PR-2 engine ran one hardwired round body — every client trains every
+round, synchronous aggregation. A ``RoundSchedule`` owns that body instead,
+so partial participation and async aggregation are engine features (one
+schedule object) rather than per-strategy rewrites:
+
+  FullParticipation  — the PR-2 body, verbatim. Bit-identical trajectories
+                       (locked down in ``tests/test_engine.py``).
+  ClientSampling     — Bernoulli-q or fixed-size cohorts drawn with
+                       ``jax.random`` *inside* the jitted chunk; the scan
+                       stays device-resident and the per-round participation
+                       masks come back as a stacked scan output, so host-side
+                       byte accounting and the privacy ledger see the exact
+                       cohorts the device drew.
+  AsyncStaleness     — buffered aggregation: clients train every round but
+                       the merge runs only every ``staleness + 1`` rounds,
+                       discounted by the FedBuff-style polynomial staleness
+                       weight (1 + s)^(-staleness_pow). staleness=0 is the
+                       synchronous body exactly.
+
+Per-round randomness matches the PR-2 derivation — ``rk = fold_in(phase_key,
+r)`` with streams 0/1/2 for batch/local/aggregate — and ClientSampling draws
+its mask from the previously unused stream 3, so adding a schedule never
+perturbs the existing streams.
+
+Participation semantics (ClientSampling): an absent client neither trains,
+sends, nor receives this round — its state is bit-unchanged. Present clients
+aggregate over the cohort only (strategies override ``aggregate_masked`` for
+method-specific cohort math, e.g. P4's masked group mean); decentralized
+methods whose aggregation reads neighbors (ring / exponential graph) see the
+absent neighbor's last-known state, which is what a real stale cache holds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_client_batches(train_x, train_y, key, batch_size: Optional[int]):
+    """Per-client minibatches drawn on device: (M, B, ...), (M, B).
+
+    ``batch_size=None`` means full-batch (returns the stacks unchanged —
+    used by P4's bootstrap phase, which trains on the whole local dataset).
+    """
+    if batch_size is None:
+        return train_x, train_y
+    M, R = train_y.shape
+    idx = jax.random.randint(key, (M, batch_size), 0, R)
+    xs = jnp.take_along_axis(
+        train_x, idx.reshape(idx.shape + (1,) * (train_x.ndim - 2)), axis=1)
+    ys = jnp.take_along_axis(train_y, idx, axis=1)
+    return xs, ys
+
+
+@dataclass(eq=False)  # identity hash: schedules are closed over by jitted chunks
+class RoundSchedule:
+    """Owns the engine's scanned round body.
+
+    ``round_body(strategy, batch_size)`` returns
+    ``body(state, r, phase_key, train_x, train_y) -> (state, (metrics, aux))``
+    where ``aux`` is an (empty or participation-carrying) dict of per-round
+    arrays stacked by the scan — the engine forwards ``aux["participation"]``
+    to byte accounting and History.
+    """
+
+    name = "full"
+
+    def client_fraction(self, M: Optional[int] = None) -> float:
+        """Expected fraction of clients participating per round — the
+        schedule's contribution to the ledger's effective sampling rate."""
+        return 1.0
+
+    def round_body(self, strategy, batch_size: Optional[int]):
+        raise NotImplementedError
+
+
+@dataclass(eq=False)
+class FullParticipation(RoundSchedule):
+    """Every client, every round, synchronous aggregation — the PR-2 body."""
+
+    name = "full"
+
+    def round_body(self, strategy, batch_size):
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = sample_client_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            state, metrics = strategy.local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1))
+            state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+            return state, (metrics, {})
+
+        return body
+
+
+@dataclass(eq=False)
+class ClientSampling(RoundSchedule):
+    """Partial participation: a per-round cohort drawn inside the jit.
+
+    ``mode="bernoulli"`` — each client independently with probability q.
+    This is exact Poisson sampling — the amplification-by-subsampling regime
+    the RDP accountant models — so an empty draw is NOT redrawn or patched
+    (that would raise the true inclusion probability above the q the ledger
+    accounts at); an empty-cohort round is a no-op (state passes through
+    unchanged, guarded in the round body for server-style strategies whose
+    cohort-weighted aggregation would otherwise divide by zero).
+    ``mode="fixed"`` — a uniformly random cohort of exactly
+    ``max(1, round(q·M))`` clients (sampling without replacement).
+    """
+
+    q: float = 1.0
+    mode: str = "bernoulli"          # bernoulli | fixed
+    name = "sampling"
+
+    def client_fraction(self, M: Optional[int] = None) -> float:
+        if self.mode == "fixed" and M:
+            return max(1, int(round(self.q * M))) / M
+        return min(1.0, float(self.q))
+
+    def draw_mask(self, key, M: int):
+        """(M,) float32 0/1 participation mask; deterministic in ``key``."""
+        k1, _ = jax.random.split(key)
+        if self.mode == "fixed":
+            k = max(1, int(round(self.q * M)))
+            order = jnp.argsort(jax.random.uniform(k1, (M,)))
+            return jnp.zeros((M,), jnp.float32).at[order[:k]].set(1.0)
+        return (jax.random.uniform(k1, (M,)) < self.q).astype(jnp.float32)
+
+    def round_body(self, strategy, batch_size):
+        def body(state, r, phase_key, train_x, train_y):
+            M = train_y.shape[0]
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = sample_client_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            mask = self.draw_mask(jax.random.fold_in(rk, 3), M)
+            new, metrics = strategy.local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1))
+            # absent clients' local training is discarded: aggregation sees
+            # their pre-round (last-known) state
+            new = strategy.merge_participation(state, new, mask)
+            new = strategy.aggregate_masked(new, r, jax.random.fold_in(rk, 2),
+                                            mask)
+            # ...and they receive nothing: final state is bit-unchanged
+            new = strategy.merge_participation(state, new, mask)
+            # empty Bernoulli cohort ⇒ the round is a no-op for everyone
+            # (stacked strategies are already frozen by the merges; this
+            # guards server-style states whose cohort-weighted aggregation
+            # has no cohort to weight)
+            empty = jnp.sum(mask) == 0
+            state = jax.tree_util.tree_map(
+                lambda s, n: jnp.where(empty, s, n), state, new)
+            return state, (metrics, {"participation": mask})
+
+        return body
+
+
+@dataclass(eq=False)
+class AsyncStaleness(RoundSchedule):
+    """Buffered aggregation: merge every ``staleness + 1`` rounds.
+
+    Clients train every round; their unaggregated local progress is the
+    buffer. At each merge point the aggregate is folded in with the
+    FedBuff-style polynomial staleness discount
+    ``w = (1 + staleness)^(-staleness_pow)``:
+
+        state ← w · aggregate(state) + (1 − w) · state
+
+    so the staler the buffered updates, the less the consensus direction is
+    trusted. ``staleness=0`` reduces to the synchronous body exactly (w = 1,
+    merge every round) — locked down in ``tests/test_schedule.py``.
+    """
+
+    staleness: int = 0
+    staleness_pow: float = 0.5
+    name = "async"
+
+    def round_body(self, strategy, batch_size):
+        period = int(self.staleness) + 1
+        weight = float(period ** (-self.staleness_pow))
+
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = sample_client_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            state, metrics = strategy.local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1))
+            if period == 1:   # synchronous: identical to FullParticipation
+                state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+                return state, (metrics, {})
+
+            def merge(s):
+                agg = strategy.aggregate(s, r, jax.random.fold_in(rk, 2))
+                return jax.tree_util.tree_map(
+                    lambda a, b: (weight * a + (1.0 - weight) * b).astype(b.dtype),
+                    agg, s)
+
+            state = jax.lax.cond(jnp.equal(r % period, period - 1),
+                                 merge, lambda s: s, state)
+            return state, (metrics, {})
+
+        return body
+
+
+def make_schedule(cfg) -> RoundSchedule:
+    """Build a RoundSchedule from a ``repro.config.ScheduleConfig``."""
+    if cfg is None or cfg.kind == "full":
+        return FullParticipation()
+    if cfg.kind == "sampling":
+        return ClientSampling(q=cfg.client_rate, mode=cfg.mode)
+    if cfg.kind == "async":
+        return AsyncStaleness(staleness=cfg.staleness,
+                              staleness_pow=cfg.staleness_pow)
+    raise ValueError(f"unknown schedule kind {cfg.kind!r}; "
+                     "expected full | sampling | async")

@@ -110,6 +110,40 @@ class Strategy:
         default — e.g. the local-training baseline never communicates)."""
         return state
 
+    # ------------------------------------------------- partial participation
+    def merge_participation(self, prev_state, new_state, mask):
+        """Under a ClientSampling schedule: keep absent clients' state.
+
+        Default: for every leaf stacked per-client (leading dim == M with an
+        unchanged shape), select ``new`` where the (M,) mask is 1 and ``prev``
+        where it is 0; other leaves (and states whose pytree structure changed
+        mid-round, e.g. a server-style global→clients expansion) pass through
+        for ``aggregate_masked`` to handle. Override when client identity
+        lives elsewhere in the state."""
+        prev_leaves, prev_def = jax.tree_util.tree_flatten(prev_state)
+        new_leaves, new_def = jax.tree_util.tree_flatten(new_state)
+        if prev_def != new_def:
+            return new_state
+        M = mask.shape[0]
+
+        def sel(o, n):
+            if n.ndim >= 1 and n.shape == o.shape and n.shape[0] == M:
+                m = mask.reshape((M,) + (1,) * (n.ndim - 1))
+                return jnp.where(m > 0, n, o)
+            return n
+
+        return jax.tree_util.tree_unflatten(
+            prev_def, [sel(o, n) for o, n in zip(prev_leaves, new_leaves)])
+
+    def aggregate_masked(self, state, r, key, mask):
+        """Aggregation under partial participation. Default: run the full
+        aggregate, then keep absent clients' pre-aggregation state — present
+        clients therefore see absent peers' last-known values (a stale cache),
+        and absent clients receive nothing. Override for cohort-weighted
+        aggregation (FedAvg/Scaffold means, P4's masked group mean)."""
+        return self.merge_participation(
+            state, self.aggregate(state, r, key), mask)
+
     def eval_params(self, state):
         """Stacked (M_test, ...) per-client parameters to evaluate."""
         raise NotImplementedError
@@ -123,9 +157,23 @@ class Strategy:
             params, test_x, test_y)
 
     # ------------------------------------------------------- optional hooks
-    def log_communication(self, net, state, r: int) -> None:
+    def log_communication(self, net, state, r: int, mask=None) -> None:
         """Record the round's messages on a P2PNetwork (host-side, called by
-        the engine at eval boundaries for each elapsed round)."""
+        the engine at eval boundaries for each elapsed round). ``mask`` is the
+        round's (M,) participation mask under a sampling schedule (None for
+        full participation) — absent clients must contribute zero bytes."""
+
+    def set_sigma(self, sigma: float) -> None:
+        """Engine hook for target-ε calibration (``Engine.fit(target_epsilon=
+        ...)``): install the calibrated noise multiplier before tracing.
+        Mutates host-side state the jitted chunks close over, so it must bump
+        ``cache_token``."""
+        if not hasattr(self, "sigma"):
+            raise AttributeError(
+                f"{type(self).__name__} has no 'sigma' attribute; override "
+                "set_sigma to route the calibrated noise multiplier")
+        self.sigma = float(sigma)
+        self.cache_token += 1
 
     def state_to_save(self, state):
         """Pytree persisted by the engine's checkpoint hook."""

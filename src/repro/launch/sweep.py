@@ -1,6 +1,14 @@
-"""Run the full dry-run sweep: every (arch × input-shape × mesh) as an
-isolated subprocess (a failed combo doesn't kill the sweep), appending JSONL
-results consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md."""
+"""Sweeps.
+
+Default mode — the full dry-run sweep: every (arch × input-shape × mesh) as
+an isolated subprocess (a failed combo doesn't kill the sweep), appending
+JSONL results consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+``--privacy`` — the small-scale ε-sweep: P4 across privacy budgets × client
+sampling rates on the federation engine. The reported budget per point is
+read back from ``History.metrics["dp_epsilon"]`` (the engine's PrivacyLedger
+record) rather than re-derived from the config, so the sweep output and the
+training record cannot disagree."""
 from __future__ import annotations
 
 import argparse
@@ -16,6 +24,55 @@ ARCHS = ["qwen2-vl-72b", "zamba2-7b", "mixtral-8x22b", "qwen3-14b",
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
+def privacy_sweep(args) -> None:
+    """P4 (ε × client-rate) grid; budgets read from History, not recomputed."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import (DPConfig, P4Config, RunConfig, ScheduleConfig,
+                              TrainConfig)
+    from repro.core.p4 import P4Trainer
+
+    rng = np.random.default_rng(args.seed)
+    M, R, feat, classes = 16, 96, 64, 10
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, R))
+    xs = protos[ys] + rng.normal(size=(M, R, feat)).astype(np.float32) * 0.4
+    X, Y = xs, ys.astype(np.int32)
+    tx, ty = jnp.asarray(X), jnp.asarray(Y)
+    rounds, batch = args.rounds, 24
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for eps in args.epsilons:
+            for q in args.client_rates:
+                sched = (ScheduleConfig(kind="sampling", client_rate=q)
+                         if q < 1.0 else ScheduleConfig())
+                cfg = RunConfig(
+                    dp=DPConfig(epsilon=float(eps), rounds=rounds,
+                                sample_rate=batch / R),
+                    p4=P4Config(group_size=4, sample_peers=M - 1),
+                    train=TrainConfig(learning_rate=0.5), schedule=sched)
+                tr = P4Trainer(feat_dim=feat, num_classes=classes, cfg=cfg)
+                t0 = time.time()
+                _, _, hist = tr.fit(X, Y, tx, ty, rounds=rounds,
+                                    eval_every=max(rounds - 1, 1),
+                                    batch_size=batch,
+                                    target_epsilon=float(eps))
+                rec = {"mode": "privacy", "epsilon_target": float(eps),
+                       "client_rate": float(q), "sigma": round(tr.sigma, 4),
+                       # the ledger's record IS the budget — no re-derivation
+                       "epsilon_spent": round(hist.metrics["dp_epsilon"][-1], 4),
+                       "delta": hist.metrics["dp_delta"][-1],
+                       "accuracy": round(hist[-1][1], 4),
+                       "rounds": rounds, "seconds": round(time.time() - t0, 1)}
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                print(f"eps={eps} q={q}: sigma={rec['sigma']} "
+                      f"spent={rec['epsilon_spent']} acc={rec['accuracy']}",
+                      flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="results/dryrun_sweep.jsonl")
@@ -26,7 +83,21 @@ def main():
     ap.add_argument("--timeout", type=int, default=1800)
     ap.add_argument("--no-cost", action="store_true")
     ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--privacy", action="store_true",
+                    help="run the P4 epsilon x client-rate sweep instead")
+    ap.add_argument("--epsilons", nargs="*", type=float,
+                    default=[3.0, 8.0, 15.0])
+    ap.add_argument("--client-rates", nargs="*", type=float,
+                    default=[1.0, 0.5, 0.1])
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.privacy:
+        if args.out == "results/dryrun_sweep.jsonl":
+            args.out = "results/privacy_sweep.jsonl"
+        privacy_sweep(args)
+        return
 
     done = set()
     if args.skip_done and os.path.exists(args.out):

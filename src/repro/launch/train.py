@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--p4", action="store_true")
     ap.add_argument("--groups", type=int, default=2)
     ap.add_argument("--epsilon", type=float, default=15.0)
+    ap.add_argument("--target-epsilon", type=float, default=None,
+                    help="RDP-calibrate the proxy noise to this budget "
+                         "instead of the Eq. 12 sigma")
+    ap.add_argument("--delta", type=float, default=1e-5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -88,15 +92,25 @@ def main():
         return batch
 
     if args.p4:
+        from repro.core import dp as dp_lib
         from repro.core.p4 import make_p4_lm_step
         from repro.data.tokens import synth_token_batch_device
-        from repro.engine import make_scan_steps
+        from repro.engine import PrivacyLedger, make_scan_steps
         from repro.optim import make_optimizer
         G = args.groups
-        step = make_p4_lm_step(api, api, train_cfg,
-                               DPConfig(epsilon=args.epsilon, microbatches=2,
-                                        rounds=args.steps),
-                               P4Config())
+        # engine-native accounting: the ledger follows the run and the log
+        # lines below read the cumulative spend from it, not a re-derivation
+        ledger = PrivacyLedger(sigma=0.0, delta=args.delta, sample_rate=1.0)
+        dp_cfg = DPConfig(epsilon=args.epsilon, microbatches=2,
+                          rounds=args.steps)
+        if args.target_epsilon is not None:
+            dp_cfg = replace(dp_cfg,
+                             noise_multiplier=ledger.calibrate(
+                                 args.target_epsilon, args.steps))
+        ledger.sigma = dp_cfg.noise_multiplier or dp_lib.noble_sigma(
+            dp_cfg.epsilon, args.delta, sample_rate=dp_cfg.sample_rate,
+            rounds=dp_cfg.rounds, local_steps=dp_cfg.local_steps)
+        step = make_p4_lm_step(api, api, train_cfg, dp_cfg, P4Config())
         opt = make_optimizer(train_cfg)
 
         def stack_init(k):
@@ -130,7 +144,10 @@ def main():
                 scans[length] = make_scan_steps(step, device_batch, length)
             t0 = time.time()
             params, opt_states, losses = scans[length](params, opt_states, key, i)
+            ledger.advance(length)
+            eps, delta = ledger.spend()
             print(f"step {i:4d} loss={float(losses[0]):.4f} "
+                  f"eps={eps:.2f} (delta={delta:g}) "
                   f"({(time.time()-t0)/length:.2f}s/step)", flush=True)
             i += length
     else:

@@ -1,0 +1,201 @@
+"""Property tests for the RDP accountant and the engine's PrivacyLedger.
+
+The accountant is the contract the round-schedule subsystem leans on (the
+sampling amplification is why partial participation buys accuracy back at
+fixed ε), so its invariants get their own property tier:
+
+  * ``rdp_epsilon`` monotone: decreasing in σ, increasing in q and steps;
+  * q = 1 reduces to the plain Gaussian-RDP closed form;
+  * ``calibrate_sigma`` → ``rdp_epsilon`` round-trips within bisection
+    tolerance;
+  * ``PrivacyLedger`` composes: uniform advance equals the closed form,
+    segmented advances are additive in RDP, mixed-q segments match a manual
+    per-order composition, ``calibrate``/``calibrate_segments`` meet their
+    targets.
+"""
+import math
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import dp as dp_lib
+from repro.engine import PrivacyLedger
+
+_settings = settings(max_examples=20, deadline=None)
+_DELTA = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# rdp_epsilon monotonicity
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(1.1, 3.0), st.floats(0.05, 1.0),
+       st.integers(1, 500))
+def test_rdp_epsilon_decreasing_in_sigma(sigma, factor, q, steps):
+    lo = dp_lib.rdp_epsilon(sigma * factor, q, steps, _DELTA)
+    hi = dp_lib.rdp_epsilon(sigma, q, steps, _DELTA)
+    assert lo <= hi + 1e-9, (sigma, factor, q, steps)
+
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(0.05, 0.9), st.floats(1.01, 2.0),
+       st.integers(1, 500))
+def test_rdp_epsilon_increasing_in_q(sigma, q, factor, steps):
+    q2 = min(1.0, q * factor)
+    e1 = dp_lib.rdp_epsilon(sigma, q, steps, _DELTA)
+    e2 = dp_lib.rdp_epsilon(sigma, q2, steps, _DELTA)
+    assert e1 <= e2 + 1e-9, (sigma, q, q2, steps)
+
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(0.05, 1.0), st.integers(1, 400),
+       st.integers(1, 400))
+def test_rdp_epsilon_increasing_in_steps(sigma, q, s1, s2):
+    lo, hi = min(s1, s2), max(s1, s2)
+    e_lo = dp_lib.rdp_epsilon(sigma, q, lo, _DELTA)
+    e_hi = dp_lib.rdp_epsilon(sigma, q, hi, _DELTA)
+    assert e_lo <= e_hi + 1e-9, (sigma, q, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# q = 1: plain Gaussian RDP closed form
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.floats(0.5, 10.0), st.integers(1, 1000))
+def test_q1_matches_gaussian_closed_form(sigma, steps):
+    """No subsampling ⇒ RDP(α) = steps·α/(2σ²) at every order, converted
+    with the same Balle-style bound — computed here independently."""
+    want = min(
+        steps * alpha / (2.0 * sigma ** 2)
+        + math.log1p(-1.0 / alpha) - math.log(_DELTA * alpha) / (alpha - 1)
+        for alpha in dp_lib.RDP_ORDERS)
+    got = dp_lib.rdp_epsilon(sigma, 1.0, steps, _DELTA)
+    assert abs(got - want) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# calibrate_sigma round-trip
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.floats(1.0, 20.0), st.floats(0.05, 1.0), st.integers(10, 1000))
+def test_calibrate_roundtrip(target, q, steps):
+    sigma = dp_lib.calibrate_sigma(target, _DELTA, q, steps)
+    eps = dp_lib.rdp_epsilon(sigma, q, steps, _DELTA)
+    # bisection returns the hi endpoint: spend meets the target...
+    assert eps <= target + 1e-6, (target, q, steps, sigma, eps)
+    # ...and is not conservative: slightly less noise overshoots
+    assert dp_lib.rdp_epsilon(sigma * 0.95, q, steps, _DELTA) > target, \
+        (target, q, steps, sigma)
+
+
+# ---------------------------------------------------------------------------
+# PrivacyLedger composition
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(0.05, 1.0), st.integers(1, 12),
+       st.integers(1, 300))
+def test_ledger_uniform_advance_matches_closed_form(sigma, q, local_steps,
+                                                    rounds):
+    led = PrivacyLedger(sigma=sigma, delta=_DELTA, sample_rate=q,
+                        local_steps=local_steps)
+    led.advance(rounds)
+    want = dp_lib.rdp_epsilon(sigma, q, rounds * local_steps, _DELTA)
+    assert abs(led.epsilon() - want) < 1e-9
+
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(0.05, 1.0), st.integers(1, 200),
+       st.integers(1, 200))
+def test_ledger_advance_is_additive(sigma, q, n1, n2):
+    one = PrivacyLedger(sigma=sigma, delta=_DELTA, sample_rate=q)
+    one.advance(n1 + n2)
+    two = PrivacyLedger(sigma=sigma, delta=_DELTA, sample_rate=q)
+    two.advance(n1)
+    two.advance(n2)
+    assert abs(one.epsilon() - two.epsilon()) < 1e-9
+    assert two.rounds_seen == n1 + n2
+
+
+@_settings
+@given(st.floats(0.5, 8.0), st.floats(0.05, 0.9), st.integers(1, 100),
+       st.integers(1, 100))
+def test_ledger_mixed_q_matches_manual_composition(sigma, q, n_full, n_sub):
+    """A q=1 bootstrap followed by a subsampled phase (the P4 shape):
+    the ledger must equal the per-order sum computed by hand."""
+    led = PrivacyLedger(sigma=sigma, delta=_DELTA, sample_rate=q)
+    led.advance(n_full, q=1.0)
+    led.advance(n_sub)
+    want = min(
+        dp_lib.rdp_to_epsilon(
+            n_full * dp_lib.rdp_increment(1.0, sigma, a)
+            + n_sub * dp_lib.rdp_increment(q, sigma, a), a, _DELTA)
+        for a in dp_lib.RDP_ORDERS)
+    assert abs(led.epsilon() - want) < 1e-9
+    # and each segment alone spends no more than the composition
+    assert led.epsilon() >= dp_lib.rdp_epsilon(sigma, q, n_sub, _DELTA) - 1e-9
+
+
+@_settings
+@given(st.floats(1.0, 15.0), st.floats(0.05, 0.8), st.integers(10, 300))
+def test_ledger_calibrate_meets_target(target, q, rounds):
+    led = PrivacyLedger(sigma=1.0, delta=_DELTA, sample_rate=q)
+    led.calibrate(target, rounds)
+    led.advance(rounds)
+    assert led.epsilon() <= target + 1e-6
+
+
+@_settings
+@given(st.floats(2.0, 15.0), st.floats(0.05, 0.8), st.integers(2, 8),
+       st.integers(10, 200))
+def test_ledger_calibrate_segments_meets_target(target, q, n_boot, n_train):
+    led = PrivacyLedger(sigma=1.0, delta=_DELTA, sample_rate=q)
+    led.calibrate_segments(target, [(n_boot, 1.0), (n_train, None)])
+    led.advance(n_boot, q=1.0)
+    led.advance(n_train)
+    assert led.epsilon() <= target + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# non-property edges
+# ---------------------------------------------------------------------------
+
+def test_ledger_zero_rounds_spends_nothing():
+    led = PrivacyLedger(sigma=1.0, delta=_DELTA)
+    assert led.epsilon() == 0.0
+    led.advance(0)
+    assert led.epsilon() == 0.0 and led.rounds_seen == 0
+
+
+def test_ledger_no_noise_is_infinite():
+    led = PrivacyLedger(sigma=0.0, delta=_DELTA)
+    led.advance(1)
+    assert math.isinf(led.epsilon())
+
+
+def test_client_rate_amplification_buys_smaller_sigma():
+    """The round-schedule mechanism: at fixed (ε, δ, rounds), sampling half
+    the clients per round needs strictly less noise."""
+    full = PrivacyLedger(sigma=1.0, delta=_DELTA, sample_rate=0.25)
+    half = PrivacyLedger(sigma=1.0, delta=_DELTA, sample_rate=0.25,
+                         client_rate=0.5)
+    assert half.calibrate(8.0, 100) < full.calibrate(8.0, 100)
+
+
+def test_target_epsilon_without_ledger_fails_loudly():
+    import jax
+    import numpy as np
+
+    from repro.baselines.local import LocalStrategy
+    from repro.engine import Engine, FederatedData
+
+    eng = Engine(LocalStrategy(feat_dim=4, num_classes=2))
+    X = np.zeros((2, 8, 4), np.float32)
+    Y = np.zeros((2, 8), np.int32)
+    data = FederatedData(X, Y, X, Y)
+    with pytest.raises(ValueError):
+        eng.fit(data, rounds=2, key=jax.random.PRNGKey(0), batch_size=4,
+                target_epsilon=5.0)

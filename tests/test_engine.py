@@ -7,13 +7,16 @@ import numpy as np
 import pytest
 
 from repro.baselines import dp_dsgt, fedavg, local
+from repro.baselines.dp_dsgt import DPDSGTStrategy
+from repro.baselines.fedavg import FedAvgStrategy
 from repro.baselines.local import LocalStrategy
 from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
 from repro.core.p2p import (P2PNetwork, aggregator_for_round,
                             simulate_group_round, simulate_phase1)
-from repro.core.p4 import P4Trainer
-from repro.engine import (Engine, FederatedData, available_strategies,
-                          eval_rounds, get_strategy, sample_client_batches)
+from repro.core.p4 import P4Strategy, P4Trainer
+from repro.engine import (Engine, FederatedData, FullParticipation,
+                          available_strategies, eval_rounds, get_strategy,
+                          sample_client_batches)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +124,81 @@ def test_scan_loop_matches_python_loop(toy, key):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=1e-5)
     assert hist.rounds == [0, 7, 14, 19]
+
+
+# ---------------------------------------------------------------------------
+# schedule-refactor bit fidelity: the FullParticipation schedule reproduces
+# the PR-2 chunk body bit-for-bit. The reference below IS the PR-2 body
+# (reconstructed verbatim: same key folds, same ops, one jitted lax.scan),
+# so the RoundSchedule indirection cannot silently change semantics for any
+# of p4 / fedavg / dp_dsgt.
+# ---------------------------------------------------------------------------
+
+def _pr2_reference(strategy, data, rounds, key, batch_size):
+    init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+    state = strategy.init(init_key, data, batch_size)
+
+    def run(state, phase_key, train_x, train_y, start):
+        def body(state, r):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = sample_client_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            state, metrics = strategy.local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1))
+            state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+            return state, metrics
+
+        return jax.lax.scan(body, state, start + jnp.arange(rounds))
+
+    out, _ = jax.jit(run)(state, phase_key, data.train_x, data.train_y,
+                          jnp.asarray(0, jnp.int32))
+    return out
+
+
+def _bit_fidelity_strategies(toy, p4_toy):
+    X, Y, tx, ty = toy
+    toy_data = FederatedData(X, Y, tx, ty)
+    xs, ys = p4_toy
+    p4_data = FederatedData(xs, ys, jnp.asarray(xs), jnp.asarray(ys))
+
+    trainer = P4Trainer(feat_dim=20, num_classes=4, cfg=_p4_cfg())
+    p4 = P4Strategy(trainer=trainer)
+    p4.set_groups([[0, 2, 4, 6], [1, 3, 5, 7]], 8)
+    yield p4, p4_data
+    yield FedAvgStrategy(feat_dim=16, num_classes=3, lr=0.5, clip=1.0,
+                         sigma=0.7, user_ratio=0.8), toy_data
+    yield DPDSGTStrategy(feat_dim=16, num_classes=3, lr=0.3, clip=1.0,
+                         sigma=0.6), toy_data
+
+
+def test_full_participation_bit_identical_to_pr2(toy, p4_toy, key):
+    for strategy, data in _bit_fidelity_strategies(toy, p4_toy):
+        engine = Engine(strategy, eval_every=100,
+                        schedule=FullParticipation())
+        state, _ = engine.fit(data, rounds=6, key=key, batch_size=16,
+                              evaluate=False)
+        ref = _pr2_reference(strategy, data, 6, key, 16)
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_schedule_history_identical(toy, key):
+    """``Engine()`` (schedule defaulted) and an explicit FullParticipation
+    produce the same History object contents — same rounds, same accuracies,
+    bit-equal final state."""
+    X, Y, tx, ty = toy
+    data = FederatedData(X, Y, tx, ty)
+    s1 = LocalStrategy(feat_dim=16, num_classes=3, lr=0.5)
+    st1, h1 = Engine(s1, eval_every=7).fit(data, rounds=20, key=key,
+                                           batch_size=8)
+    s2 = LocalStrategy(feat_dim=16, num_classes=3, lr=0.5)
+    st2, h2 = Engine(s2, eval_every=7, schedule=FullParticipation()).fit(
+        data, rounds=20, key=key, batch_size=8)
+    assert h1.rounds == h2.rounds and h1.accuracy == h2.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(st1),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------
