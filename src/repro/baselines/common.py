@@ -30,9 +30,12 @@ def sgd_update(params, grads, lr: float):
 
 def client_grad(apply_fn, params, x, y, key, *, dp_cfg=None, sigma: float = 0.0,
                 kernels=None):
-    """Gradient for one client, optionally DP (per-example clip + noise)."""
+    """Gradient for one client, optionally DP (per-example clip + noise).
+    ``sigma`` may be the engine's traced runtime value (always DP-on then) —
+    the DP-path decision must stay static, so it tests host-zero-ness."""
+    from repro.kernels.dp_clip.ref import static_zero_sigma
     loss = ce_loss(apply_fn)
-    if dp_cfg is not None and dp_cfg.enabled and sigma > 0:
+    if dp_cfg is not None and dp_cfg.enabled and not static_zero_sigma(sigma):
         return dp_lib.dp_gradients(loss, params, {"x": x, "y": y}, key,
                                    clip=dp_cfg.clip_norm, sigma=sigma,
                                    microbatches=dp_cfg.microbatches,

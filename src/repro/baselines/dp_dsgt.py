@@ -22,15 +22,43 @@ from repro.config import DPConfig
 from repro.core import dp as dp_lib
 from repro.engine import (Engine, FederatedData, FullParticipation,
                           PrivacyLedger, Strategy, register_strategy,
-                          sample_client_batches)
+                          runtime_sigma, sample_client_batches)
+
+
+def _mix_arith(t, left, right, self_w: float):
+    """The W row applied to (self, left-neighbor, right-neighbor) values —
+    one shared expression so the single-device roll, the gather fallback and
+    the ppermute halo produce bit-identical arithmetic."""
+    return self_w * t + (1 - self_w) / 2 * (left + right)
 
 
 def _ring_mix(stacked, self_w: float = 0.5):
     """W = ring with self weight 1/2 and 1/4 to each neighbor."""
     def mix(t):
-        left = jnp.roll(t, 1, axis=0)
-        right = jnp.roll(t, -1, axis=0)
-        return self_w * t + (1 - self_w) / 2 * (left + right)
+        return _mix_arith(t, jnp.roll(t, 1, axis=0), jnp.roll(t, -1, axis=0),
+                          self_w)
+    return jax.tree_util.tree_map(mix, stacked)
+
+
+def _ring_mix_sharded(stacked, ctx, self_w: float = 0.5):
+    """Ring gossip as an explicit collective: each shard ppermutes its edge
+    rows to its mesh neighbors (a halo exchange — the communication pattern a
+    real gossip round has). Valid only when the global ring lines up with the
+    shard boundaries (no padding); the uneven case falls back to
+    gather → roll → re-shard, which is exact for any M."""
+    if ctx.M_pad != ctx.M:
+        full = ctx.gather(stacked)
+        return ctx.scatter_like(_ring_mix(full, self_w), full)
+    fwd = [(i, (i + 1) % ctx.n) for i in range(ctx.n)]
+    bwd = [(i, (i - 1) % ctx.n) for i in range(ctx.n)]
+
+    def mix(t):
+        prev_last = jax.lax.ppermute(t[-1:], ctx.axis, fwd)
+        next_first = jax.lax.ppermute(t[:1], ctx.axis, bwd)
+        left = jnp.concatenate([prev_last, t[:-1]], axis=0)
+        right = jnp.concatenate([t[1:], next_first], axis=0)
+        return _mix_arith(t, left, right, self_w)
+
     return jax.tree_util.tree_map(mix, stacked)
 
 
@@ -47,13 +75,16 @@ class DPDSGTStrategy(Strategy):
         self.specs, self.apply_fn = common.make_model(self.feat_dim,
                                                       self.num_classes)
 
-    def _grads(self, params, xs, ys, key):
+    def _grads_keyed(self, params, xs, ys, keys):
         def one(p, x, y, k):
             return common.client_grad(self.apply_fn, p, x, y, k,
                                       dp_cfg=DPConfig(clip_norm=self.clip),
-                                      sigma=self.sigma)
+                                      sigma=runtime_sigma(self.sigma))
+        return jax.vmap(one)(params, xs, ys, keys)
+
+    def _grads(self, params, xs, ys, key):
         M = ys.shape[0]
-        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M))
+        return self._grads_keyed(params, xs, ys, jax.random.split(key, M))
 
     def init(self, key, data: FederatedData, batch_size):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -72,6 +103,20 @@ class DPDSGTStrategy(Strategy):
                                        x_new, state["y"])
         g_new = self._grads(x_new, xs, ys, key)
         y_new = _ring_mix(state["y"])
+        y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
+                                       y_new, g_new, state["g"])
+        return {"x": x_new, "y": y_new, "g": g_new}, {}
+
+    def sharded_local_update(self, state, xs, ys, r, key, ctx):
+        """The gossip (ring mix) crosses client-shard boundaries, so it runs
+        as a ppermute halo exchange; gradients are per-client with the global
+        key split's shard slice. Bit-identical to ``local_update`` on the
+        gathered stacks (same ``_mix_arith`` on the same neighbor values)."""
+        x_new = _ring_mix_sharded(state["x"], ctx)
+        x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
+                                       x_new, state["y"])
+        g_new = self._grads_keyed(x_new, xs, ys, ctx.shard_keys(key))
+        y_new = _ring_mix_sharded(state["y"], ctx)
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
         return {"x": x_new, "y": y_new, "g": g_new}, {}

@@ -17,7 +17,8 @@ from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
 from repro.engine import (Engine, FederatedData, FullParticipation,
-                          PrivacyLedger, Strategy, register_strategy)
+                          PrivacyLedger, Strategy, register_strategy,
+                          runtime_sigma)
 
 
 @register_strategy("fedavg")
@@ -39,20 +40,30 @@ class FedAvgStrategy(Strategy):
         return jax.tree_util.tree_map(
             lambda t: t[0], common.init_clients(self.specs, key, 1))
 
-    def local_update(self, gp, xs, ys, r, key):
-        M = ys.shape[0]
-        params = common.broadcast_like(gp, M)
+    def local_update_keyed(self, gp, xs, ys, r, keys):
+        params = common.broadcast_like(gp, ys.shape[0])
 
         def one(p, x, y, k):
             def body(pp, i):
                 g = common.client_grad(
                     self.apply_fn, pp, x, y, jax.random.fold_in(k, i),
-                    dp_cfg=DPConfig(clip_norm=self.clip), sigma=self.sigma)
+                    dp_cfg=DPConfig(clip_norm=self.clip),
+                    sigma=runtime_sigma(self.sigma))
                 return common.sgd_update(pp, g, self.lr), None
             p2, _ = jax.lax.scan(body, p, jnp.arange(self.local_steps))
             return p2
 
-        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M)), {}
+        return jax.vmap(one)(params, xs, ys, keys), {}
+
+    def local_update(self, gp, xs, ys, r, key):
+        M = ys.shape[0]
+        return self.local_update_keyed(gp, xs, ys, r,
+                                       jax.random.split(key, M))
+
+    def state_client_stacked(self, state) -> bool:
+        # server-style carry: ONE global model, replicated across the client
+        # mesh; only the mid-round (M, ...) local-update stacks are sharded
+        return False
 
     def aggregate(self, clients, r, key):
         """Strategy-level user sampling (the pre-schedule path; NOT

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines import common
-from repro.engine import Engine, FederatedData, Strategy, register_strategy
+from repro.engine import (Engine, FederatedData, Strategy, register_strategy,
+                          runtime_sigma)
 
 
 @register_strategy("local")
@@ -32,14 +33,19 @@ class LocalStrategy(Strategy):
     def init(self, key, data: FederatedData, batch_size):
         return common.init_clients(self.specs, key, data.num_clients)
 
-    def local_update(self, params, xs, ys, r, key):
+    def local_update_keyed(self, params, xs, ys, r, keys):
         def one(p, x, y, k):
             g = common.client_grad(self.apply_fn, p, x, y, k,
-                                   dp_cfg=self.dp_cfg, sigma=self.sigma,
+                                   dp_cfg=self.dp_cfg,
+                                   sigma=runtime_sigma(self.sigma),
                                    kernels=self.kernels)
             return common.sgd_update(p, g, self.lr)
+        return jax.vmap(one)(params, xs, ys, keys), {}
+
+    def local_update(self, params, xs, ys, r, key):
         M = ys.shape[0]
-        return jax.vmap(one)(params, xs, ys, jax.random.split(key, M)), {}
+        return self.local_update_keyed(params, xs, ys, r,
+                                       jax.random.split(key, M))
 
     def eval_params(self, state):
         return state

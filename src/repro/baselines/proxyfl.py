@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.baselines import common
 from repro.core import distill, dp as dp_lib
 from repro.engine import (Engine, FederatedData, FullParticipation,
-                          PrivacyLedger, Strategy, register_strategy)
+                          PrivacyLedger, Strategy, register_strategy,
+                          runtime_sigma)
 
 
 @register_strategy("proxyfl")
@@ -58,7 +59,8 @@ class ProxyFLStrategy(Strategy):
                                           self.alpha)
             if self.sigma > 0:
                 g_w = dp_lib.dp_gradients(proxy_obj, w, {"x": x, "y": y}, k,
-                                          clip=self.clip, sigma=self.sigma)
+                                          clip=self.clip,
+                                          sigma=runtime_sigma(self.sigma))
             else:
                 g_w = jax.grad(lambda p: proxy_obj(p, {"x": x, "y": y}))(w)
             return (common.sgd_update(theta, g_t, self.lr),

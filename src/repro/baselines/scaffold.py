@@ -17,7 +17,8 @@ from repro.baselines import common
 from repro.config import DPConfig
 from repro.core import dp as dp_lib
 from repro.engine import (Engine, FederatedData, FullParticipation,
-                          PrivacyLedger, Strategy, register_strategy)
+                          PrivacyLedger, Strategy, register_strategy,
+                          runtime_sigma)
 
 
 @register_strategy("scaffold")
@@ -50,7 +51,8 @@ class ScaffoldStrategy(Strategy):
             def body(pp, i):
                 g = common.client_grad(
                     self.apply_fn, pp, x, y, jax.random.fold_in(k, i),
-                    dp_cfg=DPConfig(clip_norm=self.clip), sigma=self.sigma)
+                    dp_cfg=DPConfig(clip_norm=self.clip),
+                    sigma=runtime_sigma(self.sigma))
                 # SCAFFOLD drift correction: g - c_i + c
                 corr = jax.tree_util.tree_map(lambda gg, cc, cg: gg - cc + cg,
                                               g, ci, c_global)

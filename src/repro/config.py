@@ -200,6 +200,11 @@ class MeshConfig:
     pods: int = 2
     data: int = 16
     model: int = 16
+    # client-mesh size for the sharded federation engine
+    # (repro.engine.ShardedEngine over launch.mesh.make_client_mesh):
+    # 0 = single-device engine; N = shard the (M, ...) client stacks over a
+    # 1-D "clients" axis of min(N, available devices)
+    clients: int = 0
 
     @property
     def shape(self) -> Tuple[int, ...]:

@@ -51,12 +51,15 @@ def add_noise(tree, key, sigma: float, clip: float, denom: float):
     where leaves are sharded model-parameter-sized arrays — flattening the
     tree into one (D,) vector would materialize an extra fp32 copy of the
     model and force a cross-shard gather. The per-example path noises on its
-    already-flat buffer instead (repro.kernels.dispatch.dp_clip_flat)."""
+    already-flat buffer instead (repro.kernels.dispatch.dp_clip_flat).
+
+    The scale is an explicit f32 product so a traced σ (the engine's runtime
+    noise multiplier) rounds identically to a trace-baked constant σ."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
+    scale = jnp.float32(2.0 * clip / denom) * jnp.asarray(sigma, jnp.float32)
     noised = [
-        g + (2.0 * clip / denom) * sigma
-        * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+        g + (scale * jax.random.normal(k, g.shape, jnp.float32)).astype(g.dtype)
         for g, k in zip(leaves, keys)
     ]
     return jax.tree_util.tree_unflatten(treedef, noised)

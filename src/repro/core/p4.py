@@ -26,8 +26,9 @@ from repro.core import distill, dp as dp_lib
 from repro.core.grouping import (flatten_clients, greedy_group_formation,
                                  group_ids, pairwise_l1, random_groups)
 from repro.core.small_models import accuracy, linear_apply, linear_specs, make_cnn
-from repro.engine import (Engine, FederatedData, PrivacyLedger, Strategy,
-                          make_schedule, register_strategy)
+from repro.engine import (Engine, FederatedData, PrivacyLedger, ShardedEngine,
+                          Strategy, make_schedule, register_strategy,
+                          runtime_sigma)
 from repro.models.module import init_params
 
 
@@ -121,7 +122,7 @@ class P4Trainer:
         if dpc.enabled:
             g_prox = dp_lib.dp_gradients(
                 proxy_obj, proxy, {"x": x, "y": y}, key,
-                clip=dpc.clip_norm, sigma=self.sigma,
+                clip=dpc.clip_norm, sigma=runtime_sigma(self.sigma),
                 microbatches=dpc.microbatches,
                 per_example_chunk=dpc.per_example_chunk,
                 kernels=self.cfg.kernels)
@@ -139,13 +140,12 @@ class P4Trainer:
         return new_private, new_proxy, metrics
 
     # ------------------------------------------------------------------
-    def _local_round_impl(self, states, xs, ys, key):
-        """K local steps for all clients. xs: (M, B, feat), ys: (M, B).
-        Unjitted body — traced either by the jitted ``local_round`` below or
-        inside the engine's scanned round loop."""
+    def _local_round_keyed(self, states, xs, ys, keys):
+        """K local steps, one PRNG key per client row (the seam the sharded
+        engine drives with the global key split's shard slice). Returns
+        per-client metric vectors."""
         lr = self.cfg.train.learning_rate
         K = self.cfg.dp.local_steps
-        M = ys.shape[0]
 
         def one_client(private, proxy, x, y, ckey):
             def body(carry, k):
@@ -158,10 +158,17 @@ class P4Trainer:
                                               jax.random.fold_in(ckey, K), 0.0)
             return pr, px, metrics
 
-        keys = jax.random.split(key, M)
         priv, prox, metrics = jax.vmap(one_client)(
             states["private"], states["proxy"], xs, ys, keys)
         return {"private": priv, "proxy": prox}, metrics
+
+    def _local_round_impl(self, states, xs, ys, key):
+        """K local steps for all clients. xs: (M, B, feat), ys: (M, B).
+        Unjitted body — traced either by the jitted ``local_round`` below or
+        inside the engine's scanned round loop."""
+        M = ys.shape[0]
+        return self._local_round_keyed(states, xs, ys,
+                                       jax.random.split(key, M))
 
     @functools.partial(jax.jit, static_argnums=0)
     def local_round(self, states, xs, ys, key):
@@ -198,7 +205,8 @@ class P4Trainer:
             key=None, eval_every: int = 20, batch_size: Optional[int] = None,
             groups: Optional[List[List[int]]] = None, seed: int = 0,
             bootstrap_rounds: int = 4, network=None, checkpoint_dir=None,
-            resume: bool = False, target_epsilon: Optional[float] = None):
+            resume: bool = False, target_epsilon: Optional[float] = None,
+            mesh=None):
         """Full P4 on the federation engine: a full-batch bootstrap phase
         (no aggregation, no eval), host-side grouping on the DP weights, then
         the co-training phase as one scan-chunked engine run.
@@ -219,7 +227,14 @@ class P4Trainer:
         (ε, δ) is recorded in ``history.metrics`` at every eval round —
         bootstrap rounds are accounted at q = 1 (full batch, full
         participation). ``target_epsilon`` calibrates σ against the ledger for
-        the whole run instead of using Eq. 12's σ."""
+        the whole run instead of using Eq. 12's σ.
+
+        ``mesh`` (a mesh with a ``clients`` axis, e.g. ``make_client_mesh()``)
+        runs BOTH phases on the ShardedEngine: state/data stacks sharded over
+        the client axis, group aggregation as collectives (shard-resident
+        groups aggregate without any gather — the small-scale twin of
+        ``make_p4_lm_step``'s pod-manual layout). Histories are bit-identical
+        to the single-device engine (tests/test_sharded_engine.py)."""
         rounds = rounds or self.cfg.dp.rounds
         key = key if key is not None else jax.random.PRNGKey(self.cfg.train.seed)
         M, R = train_y.shape
@@ -246,10 +261,15 @@ class P4Trainer:
             raise ValueError("target_epsilon needs dp.enabled and "
                              "schedule.accountant='rdp'")
 
+        def make_engine(**kw):
+            if mesh is not None:
+                return ShardedEngine(strategy, mesh=mesh, **kw)
+            return Engine(strategy, **kw)
+
         # bootstrap local steps on the FULL local dataset (paper §3.3: weights
         # after first local training; Eq. 11's noise scales with 1/n, so the
         # full batch + k rounds maximize the grouping signal-to-noise)
-        bootstrap = Engine(strategy, eval_every=eval_every)
+        bootstrap = make_engine(eval_every=eval_every)
         states, _ = bootstrap.fit(data, rounds=nb, key=jax.random.fold_in(key, 0),
                                   batch_size=None, evaluate=False)
         if ledger is not None:
@@ -258,9 +278,9 @@ class P4Trainer:
             groups = self.form_groups(states, seed)
         strategy.set_groups(groups, M)
 
-        engine = Engine(strategy, eval_every=eval_every, network=network,
-                        checkpoint_dir=checkpoint_dir, schedule=schedule,
-                        ledger=ledger)
+        engine = make_engine(eval_every=eval_every, network=network,
+                             checkpoint_dir=checkpoint_dir, schedule=schedule,
+                             ledger=ledger)
         states, history = engine.fit(data, rounds=rounds,
                                      key=jax.random.fold_in(key, 1),
                                      batch_size=bs, start_round=nb,
@@ -300,6 +320,9 @@ class P4Strategy(Strategy):
         states, metrics = self.trainer._local_round_impl(states, xs, ys, key)
         return states, {k: jnp.mean(v) for k, v in metrics.items()}
 
+    def local_update_keyed(self, states, xs, ys, r, keys):
+        return self.trainer._local_round_keyed(states, xs, ys, keys)
+
     def aggregate(self, states, r, key):
         if self.ids is None:          # bootstrap phase: no groups yet
             return states
@@ -315,11 +338,78 @@ class P4Strategy(Strategy):
                 "proxy": masked_group_mean(states["proxy"], self.ids,
                                            self.num_groups, mask)}
 
+    # ------------------------------------------------------- sharded engine
+    def _groups_shard_resident(self, ctx) -> bool:
+        """Host-side layout check: True iff every group's members live on one
+        mesh slice — the paper's "communicate only within your group" becomes
+        structural and aggregation needs NO collective at all (the
+        small-scale twin of make_p4_lm_step's pod-manual layout)."""
+        if self.groups is None:
+            return False
+        return all(len({i // ctx.m for i in g}) == 1 for g in self.groups)
+
+    def _local_ids(self, ctx):
+        """This shard's group ids; padded slots get the out-of-range id
+        ``num_groups`` so segment sums drop them."""
+        padded = np.full((ctx.M_pad,), self.num_groups, np.int32)
+        padded[: ctx.M] = np.asarray(self.ids)
+        return ctx.shard_rows(jnp.asarray(padded))
+
+    def sharded_aggregate(self, states, r, key, ctx):
+        if self.ids is None:
+            return states
+        if self._groups_shard_resident(ctx):
+            # group-local layout: members and their mean never leave the
+            # slice. masked_group_mean with the validity mask reproduces
+            # group_mean's arithmetic bit-for-bit for real rows (counts are
+            # identical, x·1.0 is exact) while padded rows keep their value.
+            return {"private": states["private"],
+                    "proxy": masked_group_mean(states["proxy"],
+                                               self._local_ids(ctx),
+                                               self.num_groups,
+                                               ctx.valid_mask())}
+        full = ctx.gather(states)
+        return ctx.scatter_like(self.aggregate(full, r, key), full)
+
+    def sharded_aggregate_masked(self, states, r, key, ctx, mask, local_mask):
+        if self.ids is None:
+            return states
+        if self._groups_shard_resident(ctx):
+            # local_mask is already zero on padded slots
+            return {"private": states["private"],
+                    "proxy": masked_group_mean(states["proxy"],
+                                               self._local_ids(ctx),
+                                               self.num_groups, local_mask)}
+        full = ctx.gather(states)
+        return ctx.scatter_like(self.aggregate_masked(full, r, key, mask),
+                                full)
+
+    def fingerprint(self):
+        """Value-based chunk-cache key: only trace-relevant config enters, so
+        an ε/σ sweep's points (which differ in dp.epsilon and the calibrated
+        σ — both runtime) share compiled chunks whenever the formed groups
+        coincide."""
+        t, cfg = self.trainer, self.trainer.cfg
+        groups = (None if self.groups is None
+                  else tuple(tuple(g) for g in self.groups))
+        return ("p4", self.cache_token, t.model, t.feat_dim, t.num_classes,
+                t.cnn_shape, cfg.p4, cfg.kernels, cfg.train.learning_rate,
+                cfg.dp.enabled, cfg.dp.clip_norm, cfg.dp.local_steps,
+                cfg.dp.microbatches, cfg.dp.per_example_chunk,
+                isinstance(t.sigma, (int, float)) and t.sigma > 0,
+                groups, self.num_groups)
+
+    def runtime_params(self):
+        sigma = self.trainer.sigma
+        if isinstance(sigma, (int, float)) and sigma > 0:
+            return {"sigma": float(sigma)}
+        return {}
+
     def set_sigma(self, sigma: float) -> None:
         """Target-ε calibration lands on the trainer (its σ is what
-        ``_client_step`` closes over at trace time)."""
+        ``_client_step`` reads at trace time — as the engine's runtime value,
+        so recalibration does NOT invalidate compiled chunks)."""
         self.trainer.sigma = float(sigma)
-        self.cache_token += 1
 
     def eval_params(self, states):
         """Per-client PERSONALIZED (private) model."""
@@ -417,14 +507,15 @@ def make_p4_lm_step(api_private, api_proxy, train_cfg: TrainConfig,
         vmap-only lowering leaked ~13 GB/step of embedding-gather traffic
         across pods, shard_map removes it by construction)."""
         from jax.sharding import PartitionSpec as P
-        from repro.sharding.rules import _CTX
+        from repro.sharding.rules import _CTX, shard_map_compat
         ctx = getattr(_CTX, "val", None)
         mesh = ctx[0] if ctx else None
         # NOTE: partial-manual shard_map over "pod" is the structurally right
         # tool but crashes this XLA version's SPMD partitioner (fatal check in
         # spmd_partitioner_util.cc) when nested auto axes remain — kept behind
         # a flag; the shipping fix is untied embeddings + unsharded gather
-        # table (§Perf hillclimb 3, iter 3).
+        # table (§Perf hillclimb 3, iter 3). The small-scale twin of this
+        # layout is the ShardedEngine client mesh (same compat wrapper).
         if (p4_cfg.manual_pod and mesh is not None
                 and "pod" in getattr(mesh, "axis_names", ())):
             pspec = lambda tree: jax.tree_util.tree_map(lambda _: P("pod"), tree)
@@ -433,11 +524,11 @@ def make_p4_lm_step(api_private, api_proxy, train_cfg: TrainConfig,
                 new_p, new_o, loss = _vmapped(p, o, b, k)
                 return new_p, new_o, jax.lax.pmean(jnp.mean(loss), "pod")
 
-            new_params, new_opt, loss = jax.shard_map(
-                body, mesh=mesh,
+            new_params, new_opt, loss = shard_map_compat(
+                body, mesh,
                 in_specs=(pspec(params), pspec(opt_states), pspec(batch), P()),
                 out_specs=(pspec(params), pspec(opt_states), P()),
-                axis_names={"pod"}, check_vma=False,
+                manual_axes={"pod"},
             )(params, opt_states, batch, key)
             return new_params, new_opt, {"loss": loss}
         new_params, new_opt, loss = _vmapped(params, opt_states, batch, key)

@@ -1,13 +1,17 @@
 """Unified federation engine: one device-resident round loop + a strategy
 registry covering P4 and every baseline, with pluggable round schedules
-(full / client-sampling / async) and engine-native DP accounting (see README
-§Federation engine, §Round schedules & privacy accounting)."""
+(full / client-sampling / async), engine-native DP accounting, and a
+multi-mesh execution path sharding the round loop over a client axis (see
+README §Federation engine, §Round schedules & privacy accounting, §Sharded
+engine)."""
 from repro.engine.accounting import PrivacyLedger
-from repro.engine.loop import (Engine, History, eval_rounds, make_scan_steps,
-                               sample_client_batches)
+from repro.engine.loop import (CHUNK_STATS, Engine, History,
+                               clear_chunk_cache, eval_rounds,
+                               make_scan_steps, sample_client_batches)
 from repro.engine.schedule import (AsyncStaleness, ClientSampling,
                                    FullParticipation, RoundSchedule,
                                    make_schedule)
+from repro.engine.sharded import ClientShardCtx, ShardedEngine
 from repro.engine.strategy import (FederatedData, Strategy,
                                    available_strategies, get_strategy,
-                                   register_strategy)
+                                   register_strategy, runtime_sigma)

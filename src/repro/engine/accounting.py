@@ -105,16 +105,24 @@ class PrivacyLedger:
         different sampling rates — e.g. P4's full-batch bootstrap at q = 1
         followed by a subsampled co-train phase. ``segments`` is a list of
         ``(rounds, q)`` pairs (q = None means the ledger's effective rate);
-        bisects the smallest σ whose total composed spend meets the target."""
+        bisects the smallest σ whose total composed spend meets the target.
+
+        Spend already accumulated on this ledger (e.g. rounds restored by a
+        checkpoint resume) composes into the target: the calibrated σ makes
+        the WHOLE trajectory — past plus future segments — land on
+        ``target_epsilon``, so calibrate-then-resume cannot overrun the
+        budget the caller asked for."""
         dp_lib = _dp()
         segs = [(int(r), self.q if q is None else float(q))
                 for r, q in segments if r > 0]
+        base = dict(self._rdp)   # RDP already spent before this calibration
 
         def spend(sigma: float) -> float:
             return min(
                 dp_lib.rdp_to_epsilon(
-                    sum(r * self.local_steps * dp_lib.rdp_increment(q, sigma, a)
-                        for r, q in segs),
+                    base[a]
+                    + sum(r * self.local_steps * dp_lib.rdp_increment(q, sigma, a)
+                          for r, q in segs),
                     a, self.delta)
                 for a in dp_lib.RDP_ORDERS)
 

@@ -26,6 +26,7 @@ and its cumulative (ε, δ) lands in ``History.metrics`` at every eval round.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -36,7 +37,42 @@ import numpy as np
 from repro.engine.accounting import PrivacyLedger
 from repro.engine.schedule import (FullParticipation, RoundSchedule,
                                    sample_client_batches)
-from repro.engine.strategy import FederatedData, Strategy
+from repro.engine.strategy import (FederatedData, Strategy, runtime_params)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-chunk cache: GLOBAL (cross-Engine-instance), keyed by value
+# fingerprints. A sweep that builds a fresh (strategy, Engine) pair per ε/σ
+# point reuses the chunk compiled at the first point — σ reaches the trace as
+# a runtime argument (see engine.strategy.runtime_params), so only changes
+# that alter the traced computation (groups, schedule, lr, DP on/off, mesh,
+# chunk length) miss. Bounded LRU; ``CHUNK_STATS["traces"]`` counts actual
+# retraces (the probe the regression tests assert on).
+# ---------------------------------------------------------------------------
+
+CHUNK_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
+CHUNK_CACHE_MAX = 128
+CHUNK_STATS = {"traces": 0, "hits": 0, "misses": 0}
+
+
+def clear_chunk_cache() -> None:
+    CHUNK_CACHE.clear()
+    CHUNK_STATS.update(traces=0, hits=0, misses=0)
+
+
+def _cache_get(key):
+    fn = CHUNK_CACHE.get(key)
+    if fn is not None:
+        CHUNK_CACHE.move_to_end(key)
+        CHUNK_STATS["hits"] += 1
+    return fn
+
+
+def _cache_put(key, fn) -> None:
+    CHUNK_STATS["misses"] += 1
+    CHUNK_CACHE[key] = fn
+    while len(CHUNK_CACHE) > CHUNK_CACHE_MAX:
+        CHUNK_CACHE.popitem(last=False)
 
 
 @dataclass
@@ -107,27 +143,42 @@ class Engine:
     def __post_init__(self):
         if self.schedule is None:
             self.schedule = FullParticipation()
-        self._chunk_cache: Dict[Tuple[int, Optional[int], int], Any] = {}
 
     # ------------------------------------------------------------------
-    def _chunk_fn(self, length: int, batch_size: Optional[int]):
+    def _chunk_key(self, length: int, batch_size: Optional[int]) -> Tuple:
+        """Global-cache key: everything that changes the traced computation.
+        Strategy/schedule fingerprints carry cache_token, groups, lr, DP
+        on/off, ... — σ is deliberately absent (runtime argument); the
+        runtime-param *keys* are in (their presence gates noise ops)."""
+        return (self.strategy.fingerprint(), self.schedule.fingerprint(),
+                length, batch_size,
+                tuple(sorted(self.strategy.runtime_params())),
+                self._mesh_fingerprint())
+
+    def _mesh_fingerprint(self) -> Tuple:
+        return ()   # single-device loop; ShardedEngine adds (axis, n, M)
+
+    def _chunk_fn(self, length: int, batch_size: Optional[int],
+                  data: FederatedData):
         """Jitted scan over ``length`` rounds; the state carry is donated.
-        The cache key includes the strategy's ``cache_token`` so host-side
-        strategy changes (e.g. groups set between phases) can't be silently
-        shadowed by a previously compiled chunk."""
-        key_ = (length, batch_size, self.strategy.cache_token)
-        if key_ in self._chunk_cache:
-            return self._chunk_cache[key_]
+        Cached globally across Engine instances (see CHUNK_CACHE above)."""
+        key_ = self._chunk_key(length, batch_size)
+        fn = _cache_get(key_)
+        if fn is not None:
+            return fn
         body = self.schedule.round_body(self.strategy, batch_size)
 
-        def run(state, phase_key, train_x, train_y, start):
-            def scan_body(state, r):
-                return body(state, r, phase_key, train_x, train_y)
+        def run(state, phase_key, train_x, train_y, start, rt):
+            CHUNK_STATS["traces"] += 1   # python body executes per trace only
+            with runtime_params(rt):
+                def scan_body(state, r):
+                    return body(state, r, phase_key, train_x, train_y)
 
-            return jax.lax.scan(scan_body, state, start + jnp.arange(length))
+                return jax.lax.scan(scan_body, state,
+                                    start + jnp.arange(length))
 
         fn = jax.jit(run, donate_argnums=0)
-        self._chunk_cache[key_] = fn
+        _cache_put(key_, fn)
         return fn
 
     def run_rounds(self, state, data: FederatedData, phase_key, start: int,
@@ -138,10 +189,29 @@ class Engine:
         sampling schedule (empty dict otherwise)."""
         if stop <= start:
             return state, {}, {}
-        fn = self._chunk_fn(stop - start, batch_size)
-        state, (metrics, aux) = fn(state, phase_key, data.train_x,
-                                   data.train_y, jnp.asarray(start, jnp.int32))
+        fn = self._chunk_fn(stop - start, batch_size, data)
+        train_x, train_y = self._train_arrays(data)
+        rt = {k: jnp.asarray(v, jnp.float32)
+              for k, v in self.strategy.runtime_params().items()}
+        state, (metrics, aux) = fn(state, phase_key, train_x, train_y,
+                                   jnp.asarray(start, jnp.int32), rt)
         return state, metrics, aux
+
+    # ------------------------------------------------- sharded-engine seams
+    def _train_arrays(self, data: FederatedData):
+        """Training stacks as the chunk consumes them (padded under a client
+        mesh)."""
+        return data.train_x, data.train_y
+
+    def _prepare_state(self, state, data: FederatedData):
+        """Engine-internal state representation (client-padded + mesh-sharded
+        under ShardedEngine; identity here)."""
+        return state
+
+    def _finalize_state(self, state):
+        """Back to the strategy-visible representation (unpad) for evaluate,
+        checkpointing, and the value ``fit`` returns."""
+        return state
 
     # ------------------------------------------------------------------
     def fit(self, data: FederatedData, *, rounds: int, key,
@@ -160,28 +230,43 @@ class Engine:
         """
         strategy = self.strategy
         init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+        history = history if history is not None else History()
+
+        # resolve the resume point BEFORE calibration and init: calibrating
+        # with the pre-resume start_round would size σ for rounds that will
+        # never run (the old double-advance hazard), and strategies whose
+        # init consumes σ (e.g. DP-DSGT's noised tracker bootstrap) must see
+        # the calibrated value
+        resume_step = None
+        if resume and self.checkpoint_dir:
+            from repro.checkpoint import latest_step
+            resume_step = latest_step(self.checkpoint_dir)
+        if resume_step is not None and self.ledger is not None:
+            # the rounds skipped by the resume were spent by the pre-restart
+            # run — an accountant that forgot them would under-report the
+            # release's true (ε, δ)
+            self.ledger.advance(resume_step + 1 - start_round)
         if target_epsilon is not None:
             if self.ledger is None:
                 raise ValueError("target_epsilon requires a PrivacyLedger")
-            strategy.set_sigma(
-                self.ledger.calibrate(target_epsilon, rounds - start_round))
+            remaining = rounds - (resume_step + 1 if resume_step is not None
+                                  else start_round)
+            # composes on the ledger's accumulated spend (incl. the resumed
+            # rounds just advanced): past + future lands on the target
+            strategy.set_sigma(self.ledger.calibrate(target_epsilon,
+                                                     remaining))
+
         if state is None:
             state = strategy.init(init_key, data, batch_size)
-        history = history if history is not None else History()
-
-        if resume and self.checkpoint_dir:
-            from repro.checkpoint import latest_step, restore_checkpoint
-            step = latest_step(self.checkpoint_dir)
-            if step is not None:
-                saved, step = restore_checkpoint(
-                    self.checkpoint_dir, strategy.state_to_save(state), step)
-                state = saved
-                if self.ledger is not None:
-                    # the rounds skipped by the resume were spent by the
-                    # pre-restart run — an accountant that forgot them would
-                    # under-report the release's true (ε, δ)
-                    self.ledger.advance(step + 1 - start_round)
-                start_round = step + 1
+        state = self._prepare_state(state, data)
+        if resume_step is not None:
+            from repro.checkpoint import restore_checkpoint
+            saved, resume_step = restore_checkpoint(
+                self.checkpoint_dir,
+                strategy.state_to_save(self._finalize_state(state)),
+                resume_step)
+            state = self._prepare_state(saved, data)
+            start_round = resume_step + 1
 
         boundaries = (eval_rounds(start_round, rounds, self.eval_every)
                       if evaluate else [])
@@ -193,7 +278,8 @@ class Engine:
             if self.ledger is not None:
                 self.ledger.advance(ev + 1 - cursor)
             cursor = ev + 1
-            acc = strategy.evaluate(state, data.test_x, data.test_y)
+            acc = strategy.evaluate(self._finalize_state(state), data.test_x,
+                                    data.test_y)
             chunk_means = {k: jnp.mean(v) for k, v in (metrics or {}).items()}
             if "participation" in aux:
                 chunk_means["participation_rate"] = jnp.mean(
@@ -204,7 +290,8 @@ class Engine:
             if self.checkpoint_dir:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(self.checkpoint_dir, ev,
-                                strategy.state_to_save(state))
+                                strategy.state_to_save(
+                                    self._finalize_state(state)))
         if cursor < rounds:  # tail (or the whole phase when evaluate=False)
             state, _, aux = self.run_rounds(state, data, phase_key, cursor,
                                             rounds, batch_size)
@@ -212,7 +299,7 @@ class Engine:
                               aux.get("participation"))
             if self.ledger is not None:
                 self.ledger.advance(rounds - cursor)
-        return state, history
+        return self._finalize_state(state), history
 
     # ------------------------------------------------------------------
     def _log_network(self, state, first_round: int, last_round: int,

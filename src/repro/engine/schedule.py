@@ -33,6 +33,7 @@ absent neighbor's last-known state, which is what a real stale cache holds.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -74,8 +75,22 @@ class RoundSchedule:
         schedule's contribution to the ledger's effective sampling rate."""
         return 1.0
 
+    def fingerprint(self):
+        """Value key for the engine's compiled-chunk cache (all schedule
+        fields are trace-baked constants, so all of them key)."""
+        return (type(self).__name__,) + tuple(
+            (f.name, getattr(self, f.name)) for f in dataclasses.fields(self))
+
     def round_body(self, strategy, batch_size: Optional[int]):
         raise NotImplementedError
+
+    def sharded_round_body(self, strategy, batch_size: Optional[int], ctx):
+        """Round body for a shard_map region over the client axis: same key
+        derivation and call sequence as ``round_body``, with the strategy's
+        sharded hooks in place of the single-device ones (see
+        ``repro.engine.sharded``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no sharded round body")
 
 
 @dataclass(eq=False)
@@ -92,6 +107,19 @@ class FullParticipation(RoundSchedule):
             state, metrics = strategy.local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1))
             state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+            return state, (metrics, {})
+
+        return body
+
+    def sharded_round_body(self, strategy, batch_size, ctx):
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = ctx.sample_local_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            state, metrics = strategy.sharded_local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
+            state = strategy.sharded_aggregate(
+                state, r, jax.random.fold_in(rk, 2), ctx)
             return state, (metrics, {})
 
         return body
@@ -157,6 +185,30 @@ class ClientSampling(RoundSchedule):
 
         return body
 
+    def sharded_round_body(self, strategy, batch_size, ctx):
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = ctx.sample_local_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            # the full (M,) mask is drawn replicated — every shard computes
+            # the same draw the single-device body makes, then slices its own
+            # rows; the aux output stays the full mask so byte accounting and
+            # the ledger see exactly the single-device cohorts
+            mask = self.draw_mask(jax.random.fold_in(rk, 3), ctx.M)
+            local_mask = ctx.shard_rows(mask)
+            new, metrics = strategy.sharded_local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
+            new = strategy.merge_participation(state, new, local_mask)
+            new = strategy.sharded_aggregate_masked(
+                new, r, jax.random.fold_in(rk, 2), ctx, mask, local_mask)
+            new = strategy.merge_participation(state, new, local_mask)
+            empty = jnp.sum(mask) == 0
+            state = jax.tree_util.tree_map(
+                lambda s, n: jnp.where(empty, s, n), state, new)
+            return state, (metrics, {"participation": mask})
+
+        return body
+
 
 @dataclass(eq=False)
 class AsyncStaleness(RoundSchedule):
@@ -200,6 +252,36 @@ class AsyncStaleness(RoundSchedule):
 
             state = jax.lax.cond(jnp.equal(r % period, period - 1),
                                  merge, lambda s: s, state)
+            return state, (metrics, {})
+
+        return body
+
+    def sharded_round_body(self, strategy, batch_size, ctx):
+        period = int(self.staleness) + 1
+        weight = float(period ** (-self.staleness_pow))
+
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = ctx.sample_local_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            state, metrics = strategy.sharded_local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
+            if period == 1:   # synchronous: identical to FullParticipation
+                state = strategy.sharded_aggregate(
+                    state, r, jax.random.fold_in(rk, 2), ctx)
+                return state, (metrics, {})
+            # collectives must execute uniformly across shards, so the merge
+            # is select-based rather than lax.cond: the aggregate (and its
+            # all_gather/psum) runs every round and non-merge rounds select
+            # the untouched state — bit-identical outcomes, uniform comms
+            agg = strategy.sharded_aggregate(
+                state, r, jax.random.fold_in(rk, 2), ctx)
+            merged = jax.tree_util.tree_map(
+                lambda a, b: (weight * a + (1.0 - weight) * b).astype(b.dtype),
+                agg, state)
+            is_merge = jnp.equal(r % period, period - 1)
+            state = jax.tree_util.tree_map(
+                lambda m, s: jnp.where(is_merge, m, s), merged, state)
             return state, (metrics, {})
 
         return body

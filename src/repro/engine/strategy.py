@@ -17,6 +17,9 @@ returns the class so sweeps can be driven by config strings.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
@@ -24,6 +27,58 @@ import jax
 import jax.numpy as jnp
 
 _REGISTRY: Dict[str, type] = {}
+
+
+# ---------------------------------------------------------------------------
+# Runtime parameters: host-side scalars (today: the DP noise multiplier σ)
+# threaded into the jitted chunk as *arguments* instead of being baked into
+# the trace as constants. This is what lets a sweep over ε/σ reuse one
+# compiled chunk across points: the engine activates the context while the
+# chunk traces, strategies read the traced value through ``runtime_sigma``,
+# and subsequent calls just pass a different scalar.
+# ---------------------------------------------------------------------------
+
+_RUNTIME = threading.local()
+
+
+@contextlib.contextmanager
+def runtime_params(params: Dict[str, jnp.ndarray]):
+    """Trace-time context installed by the engine around the chunk body."""
+    prev = getattr(_RUNTIME, "params", None)
+    _RUNTIME.params = params
+    try:
+        yield
+    finally:
+        _RUNTIME.params = prev
+
+
+def runtime_sigma(static_sigma):
+    """The traced σ if an engine runtime context is active, else the host
+    value. Only substitutes when DP is actually on (static σ > 0) so the
+    σ == 0 trace keeps its noiseless structure — DP on/off is part of the
+    chunk-cache key, the magnitude is not."""
+    if isinstance(static_sigma, (int, float)) and static_sigma > 0:
+        d = getattr(_RUNTIME, "params", None)
+        if d is not None and "sigma" in d:
+            return d["sigma"]
+    return static_sigma
+
+
+class _IdToken:
+    """Identity-keyed fingerprint entry for field values that aren't
+    hashable by value. The chunk cache holds the key (and therefore the
+    object) alive, so the identity is stable for the cache's lifetime —
+    two distinct instances never collide, they just don't share chunks."""
+    __slots__ = ("obj",)
+
+    def __init__(self, obj):
+        self.obj = obj
+
+    def __hash__(self):
+        return id(self.obj)
+
+    def __eq__(self, other):
+        return isinstance(other, _IdToken) and other.obj is self.obj
 
 
 def register_strategy(name: str) -> Callable[[type], type]:
@@ -89,8 +144,40 @@ class Strategy:
     name = "base"
     # engine chunk-cache invalidation: the compiled round chunks close over
     # the strategy, so any host-side attribute change that alters the traced
-    # computation (e.g. P4Strategy.set_groups) MUST bump this counter
+    # computation (e.g. P4Strategy.set_groups) MUST bump this counter.
+    # (σ is exempt: it flows through the chunk as a runtime argument.)
     cache_token = 0
+
+    # ------------------------------------------------------------ chunk cache
+    def fingerprint(self) -> Tuple:
+        """Value key for the engine's cross-instance compiled-chunk cache:
+        two strategies with equal fingerprints must trace to the same chunk
+        computation (σ excluded — it is a runtime argument; only its
+        positivity, which gates the noise ops, is keyed). The default walks
+        the dataclass fields; unhashable values fall back to identity tokens
+        (safe: no cross-instance reuse). Override to enable value-based
+        reuse for composite fields (see P4Strategy)."""
+        vals = [type(self).__name__, self.cache_token]
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "sigma":
+                vals.append(isinstance(v, (int, float)) and v > 0)
+                continue
+            try:
+                hash(v)
+            except TypeError:
+                v = _IdToken(v)
+            vals.append(v)
+        return tuple(vals)
+
+    def runtime_params(self) -> Dict[str, float]:
+        """Host scalars the engine passes into the chunk each call (read back
+        at trace time via ``runtime_sigma``). Keys must be stable for a given
+        fingerprint — presence/absence is part of the chunk-cache key."""
+        sigma = getattr(self, "sigma", 0.0)
+        if isinstance(sigma, (int, float)) and sigma > 0:
+            return {"sigma": float(sigma)}
+        return {}
 
     # ------------------------------------------------------------------ hooks
     def init(self, key, data: FederatedData, batch_size: Optional[int]):
@@ -105,10 +192,71 @@ class Strategy:
         """
         raise NotImplementedError
 
+    def local_update_keyed(self, state, xs, ys, r, keys):
+        """Per-client-keyed form of ``local_update``: ``keys`` is the stacked
+        key array aligned with the leading client axis. Strategies that
+        support the sharded engine implement this (and express
+        ``local_update`` as ``local_update_keyed(..., split(key, M))``) so a
+        client shard can be driven with the *global* key split's slice —
+        per-client randomness becomes layout-invariant. Returns
+        ``(state, per_client_metrics)`` with (M',)-shaped metric leaves."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement local_update_keyed; "
+            "it cannot run under the sharded engine")
+
     def aggregate(self, state, r, key):
         """Communication/aggregation step after local updates (identity by
         default — e.g. the local-training baseline never communicates)."""
         return state
+
+    # ------------------------------------------------------- sharded engine
+    # These hooks run inside a shard_map region over the client mesh axis
+    # (``repro.engine.sharded``): ``state``/``xs``/``ys`` hold this shard's
+    # client rows, ``ctx`` is the ClientShardCtx. Defaults are bit-exact with
+    # the single-device path by construction; strategies override to replace
+    # the all_gather round-trip with cheaper collectives (P4's pod-resident
+    # group mean, DP-DSGT's ppermute ring gossip).
+
+    def state_client_stacked(self, state) -> bool:
+        """Whether the *carry* state is client-stacked (leading client dim on
+        every stacked leaf). Server-style strategies whose carry is a single
+        global model (FedAvg, Scaffold) return False so the engine replicates
+        the carry instead of trusting the leading-dim shape heuristic."""
+        return True
+
+    def sharded_local_update(self, state, xs, ys, r, key, ctx):
+        """Local update on this shard's clients. Default: derive the full
+        run's per-client keys (identical on every shard), feed this shard's
+        slice to ``local_update_keyed``, and reduce metrics to the same
+        global means the single-device path records."""
+        state, per_client = self.local_update_keyed(
+            state, xs, ys, r, ctx.shard_keys(key))
+        return state, ctx.metric_means(per_client)
+
+    def sharded_aggregate(self, state, r, key, ctx):
+        """Aggregation as explicit collectives. Default: all_gather the
+        client stacks to the full (M, ...) trees, run the single-device
+        ``aggregate`` verbatim (bit-identical arithmetic), slice this shard's
+        rows back out. Replicated (non-stacked) outputs pass through.
+        Strategies that never communicate (``aggregate`` left as the base
+        identity — local training, gossip-in-local_update methods) skip the
+        round-trip entirely."""
+        if type(self).aggregate is Strategy.aggregate:
+            return state
+        full = ctx.gather(state)
+        return ctx.scatter_like(self.aggregate(full, r, key), full)
+
+    def sharded_aggregate_masked(self, state, r, key, ctx, mask, local_mask):
+        """Cohort aggregation under a sampling schedule: ``mask`` is the full
+        (M,) participation mask (replicated — every shard drew the same one),
+        ``local_mask`` its rows for this shard."""
+        if (type(self).aggregate is Strategy.aggregate
+                and type(self).aggregate_masked is Strategy.aggregate_masked):
+            # merge_participation(state, identity(state)) == state bitwise
+            return state
+        full = ctx.gather(state)
+        return ctx.scatter_like(self.aggregate_masked(full, r, key, mask),
+                                full)
 
     # ------------------------------------------------- partial participation
     def merge_participation(self, prev_state, new_state, mask):
@@ -165,15 +313,15 @@ class Strategy:
 
     def set_sigma(self, sigma: float) -> None:
         """Engine hook for target-ε calibration (``Engine.fit(target_epsilon=
-        ...)``): install the calibrated noise multiplier before tracing.
-        Mutates host-side state the jitted chunks close over, so it must bump
-        ``cache_token``."""
+        ...)``): install the calibrated noise multiplier. σ flows into
+        compiled chunks as a runtime argument (``runtime_sigma``), so this no
+        longer invalidates the chunk cache — which is exactly what lets an
+        ε-sweep reuse one compiled chunk across calibration points."""
         if not hasattr(self, "sigma"):
             raise AttributeError(
                 f"{type(self).__name__} has no 'sigma' attribute; override "
                 "set_sigma to route the calibrated noise multiplier")
         self.sigma = float(sigma)
-        self.cache_token += 1
 
     def state_to_save(self, state):
         """Pytree persisted by the engine's checkpoint hook."""

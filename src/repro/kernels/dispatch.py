@@ -195,7 +195,8 @@ def dp_clip_flat(flat, clip: float, key=None, *, sigma: float = 0.0,
     Eq. 11 Gaussian drawn once on the (D,) output buffer. The draw is
     identical across backends (same key -> bit-equal noise); sigma > 0
     without a key raises."""
-    if sigma and key is None:   # fail before the clip passes, not after
+    # a traced σ counts as positive: fail before the clip passes, not after
+    if not dp_ref.static_zero_sigma(sigma) and key is None:
         raise ValueError("sigma > 0 requires a PRNG key (privacy guard)")
     out = clip_accumulate(flat, clip, denom=denom, kernels=kernels)
     return dp_ref.add_flat_noise(out, key, sigma, clip, denom)

@@ -29,20 +29,31 @@ def clip_accumulate(x, clip: float, denom: float = 1.0):
     return scale_accumulate(x, scales)                  # read 2 of (B, D)
 
 
+def static_zero_sigma(sigma) -> bool:
+    """True only for a *host* zero: a traced σ (the engine's runtime noise
+    multiplier, see ``repro.engine.strategy.runtime_sigma``) is only ever
+    injected on DP-on traces, so it counts as positive."""
+    return isinstance(sigma, (int, float)) and not sigma
+
+
 def add_flat_noise(out, key, sigma: float, clip: float, denom: float):
     """Eq. 11 noise on a flat buffer: out + (2C/denom)·σ·N(0, 1).
 
     THE canonical noise expression — every backend and the chunked path call
     this one helper, which is what makes the same-key draw bit-identical
     across them. sigma > 0 without a key is a silent privacy violation, so
-    it raises."""
-    if not sigma:
+    it raises.
+
+    The scale is computed as an explicit float32 product so a traced σ (the
+    engine's runtime argument) and a trace-baked constant σ round identically
+    — the sharded/chunk-cache equivalence tests compare them bit-for-bit."""
+    if static_zero_sigma(sigma):
         return out
     if key is None:
         raise ValueError("sigma > 0 requires a PRNG key (refusing to return "
                          "unnoised gradients from a DP path)")
-    return out + (2.0 * clip / denom) * sigma * jax.random.normal(
-        key, out.shape, jnp.float32)
+    scale = jnp.float32(2.0 * clip / denom) * jnp.asarray(sigma, jnp.float32)
+    return out + scale * jax.random.normal(key, out.shape, jnp.float32)
 
 
 def dp_clip_reference(x, clip: float, key=None, *, sigma: float = 0.0,

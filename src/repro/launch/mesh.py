@@ -1,13 +1,16 @@
-"""Production mesh definitions (v5e).
+"""Production mesh definitions (v5e) + host-simulation meshes.
 
 Functions, not module-level constants — importing this module never touches
 jax device state (the dry-run must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 
 from repro.config import MeshConfig
+from repro.sharding.rules import CLIENT_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,8 +27,37 @@ def make_mesh(cfg: MeshConfig):
     return jax.make_mesh(cfg.shape, cfg.axis_names)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over real host devices (tests / examples)."""
+def host_mesh_shape(data: int, model: int, num_devices: int) -> Tuple[int, int]:
+    """Explicit clamping for the host-simulation mesh (pure, tested):
+
+      data'  = clamp(data, 1, n)        — never exceed available devices
+      model' = clamp(model, 1, n//data') — whatever capacity data left over
+
+    A model request that no longer fits after the data clamp degrades to a
+    1-sized model axis (replicated tensor-parallel) instead of crashing on
+    ``n // 0`` or silently requesting more devices than exist. The product
+    data'·model' is always ≥ 1 and ≤ n."""
+    n = max(1, int(num_devices))
+    data = max(1, min(int(data), n))
+    model = max(1, min(int(model), n // data))
+    return data, model
+
+
+def make_host_mesh(data: int = 1, model: int = 1, *,
+                   num_devices: Optional[int] = None):
+    """Tiny mesh over real host devices (tests / examples); shapes are the
+    explicit ``host_mesh_shape`` clamp, and the mesh only claims the devices
+    it uses (the product may be smaller than the device count)."""
+    n = num_devices if num_devices is not None else len(jax.devices())
+    data, model = host_mesh_shape(data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
+
+
+def make_client_mesh(clients: Optional[int] = None, *, axis: str = CLIENT_AXIS):
+    """1-D mesh over ``clients`` devices for the sharded federation engine
+    (``repro.engine.ShardedEngine``): each slice hosts a disjoint client
+    shard of the (M, ...) state/data stacks. Default: every host device."""
     n = len(jax.devices())
-    data = min(data, n)
-    return jax.make_mesh((data, max(1, min(model, n // data))), ("data", "model"))
+    clients = n if clients is None else max(1, min(int(clients), n))
+    return jax.make_mesh((clients,), (axis,), devices=jax.devices()[:clients])

@@ -25,14 +25,32 @@ SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
 def privacy_sweep(args) -> None:
-    """P4 (ε × client-rate) grid; budgets read from History, not recomputed."""
+    """P4 (ε × client-rate) grid; budgets read from History, not recomputed.
+
+    Compiled chunks are shared ACROSS sweep points through the engine's
+    global chunk cache: the calibrated σ reaches the trace as a runtime
+    argument, so every ε at the same client rate reuses the first point's
+    compilation (the bootstrap chunk always; the co-train chunk whenever the
+    formed groups coincide). Cache hit/miss/trace counts are reported per
+    point so a retrace regression is visible in the sweep log.
+
+    ``--sharded`` runs each point on the ShardedEngine over a client mesh of
+    every available device (set XLA_FLAGS=--xla_force_host_platform_device_count=N
+    to host-simulate)."""
     import jax.numpy as jnp
     import numpy as np
 
     from repro.config import (DPConfig, P4Config, RunConfig, ScheduleConfig,
                               TrainConfig)
     from repro.core.p4 import P4Trainer
+    from repro.engine import CHUNK_STATS, clear_chunk_cache
 
+    mesh = None
+    if args.sharded:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(args.mesh_clients or None)
+
+    clear_chunk_cache()
     rng = np.random.default_rng(args.seed)
     M, R, feat, classes = 16, 96, 64, 10
     protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
@@ -55,21 +73,29 @@ def privacy_sweep(args) -> None:
                     train=TrainConfig(learning_rate=0.5), schedule=sched)
                 tr = P4Trainer(feat_dim=feat, num_classes=classes, cfg=cfg)
                 t0 = time.time()
+                stats0 = dict(CHUNK_STATS)
                 _, _, hist = tr.fit(X, Y, tx, ty, rounds=rounds,
                                     eval_every=max(rounds - 1, 1),
                                     batch_size=batch,
-                                    target_epsilon=float(eps))
+                                    target_epsilon=float(eps), mesh=mesh)
+                # THIS point's cache behavior (points after the first should
+                # be pure hits), not the cumulative global counters
+                cache = {k: CHUNK_STATS[k] - stats0[k] for k in CHUNK_STATS}
                 rec = {"mode": "privacy", "epsilon_target": float(eps),
                        "client_rate": float(q), "sigma": round(tr.sigma, 4),
                        # the ledger's record IS the budget — no re-derivation
                        "epsilon_spent": round(hist.metrics["dp_epsilon"][-1], 4),
                        "delta": hist.metrics["dp_delta"][-1],
                        "accuracy": round(hist[-1][1], 4),
-                       "rounds": rounds, "seconds": round(time.time() - t0, 1)}
+                       "rounds": rounds, "seconds": round(time.time() - t0, 1),
+                       "sharded": bool(mesh is not None),
+                       "chunk_cache": cache}
                 f.write(json.dumps(rec) + "\n")
                 f.flush()
                 print(f"eps={eps} q={q}: sigma={rec['sigma']} "
-                      f"spent={rec['epsilon_spent']} acc={rec['accuracy']}",
+                      f"spent={rec['epsilon_spent']} acc={rec['accuracy']} "
+                      f"cache={cache['hits']}h/{cache['misses']}m/"
+                      f"{cache['traces']}t",
                       flush=True)
 
 
@@ -91,6 +117,11 @@ def main():
                     default=[1.0, 0.5, 0.1])
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sharded", action="store_true",
+                    help="--privacy: run points on the ShardedEngine over a "
+                         "client mesh of every device")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="--privacy --sharded: client-mesh size (0 = all)")
     args = ap.parse_args()
 
     if args.privacy:

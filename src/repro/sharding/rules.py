@@ -107,6 +107,55 @@ def _axis_if(divides: int, size: int, axis):
     return axis if size > 0 and divides > 0 and divides % size == 0 else None
 
 
+# ---------------------------------------------------------------------------
+# Client (federation) axis: the sharded engine runs the scanned round body
+# under shard_map over a mesh axis holding disjoint client shards. The spec
+# derivation lives here so the engine and the LM-scale pod path agree on how
+# client-stacked pytrees map onto a mesh.
+# ---------------------------------------------------------------------------
+
+CLIENT_AXIS = "clients"
+
+
+def client_specs(tree, stacked: int, axis: str = CLIENT_AXIS):
+    """PartitionSpec tree for a client-stacked pytree: leaves whose leading
+    dim equals ``stacked`` shard over ``axis``; everything else replicates.
+
+    ``stacked`` is the (padded) client count — an exact-size match, not a
+    divisibility heuristic, so a replicated (D,) leaf with D == stacked is
+    the only ambiguity; strategies whose carry is server-style (no client
+    axis at all, e.g. FedAvg's global model) override
+    ``Strategy.state_client_stacked`` to force full replication instead of
+    relying on this shape test."""
+    def spec(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == stacked:
+            return PartitionSpec(axis)
+        return PartitionSpec()
+    return jax.tree_util.tree_map(
+        spec, tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, *, manual_axes=None):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=..., check_vma=...)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., auto=...,
+    check_rep=...)`` where partial-manual regions are expressed as the
+    complement (``auto`` = axes NOT under manual control). ``manual_axes``
+    None means fully manual over every mesh axis."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {"check_vma": False}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    kw = {"check_rep": False}
+    if manual_axes is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def batch_axes(mesh_cfg: MeshConfig):
     """Mesh axes that shard the global batch (pod joins data in multi-pod)."""
     return ("pod", "data") if mesh_cfg.multi_pod else ("data",)

@@ -1,0 +1,213 @@
+"""Sharded-vs-single-device equivalence scenarios, executed as a subprocess
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` by
+``tests/test_sharded_engine.py`` (the flag must be set before the first jax
+init, hence the process boundary — same recipe as the mini dry-run).
+
+Prints ONE JSON object: scenario name -> equivalence record. The host-side
+tests assert on the records, so a failure names the exact scenario."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _leaves(tree):
+    import jax
+    import numpy as np
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def tree_bit_equal(a, b) -> bool:
+    import numpy as np
+    return all(np.array_equal(x, y) for x, y in zip(_leaves(a), _leaves(b)))
+
+
+def tree_maxdiff(a, b) -> float:
+    import numpy as np
+    return float(max(np.max(np.abs(x.astype(np.float64) - y.astype(np.float64)))
+                     for x, y in zip(_leaves(a), _leaves(b))))
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    from repro.baselines.fedavg import FedAvgStrategy
+    from repro.baselines.local import LocalStrategy
+    from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+    from repro.core.p2p import P2PNetwork
+    from repro.core.p4 import P4Strategy, P4Trainer
+    from repro.engine import (AsyncStaleness, ClientSampling, ClientShardCtx,
+                              Engine, FederatedData, ShardedEngine)
+    from repro.launch.mesh import make_client_mesh
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh8 = make_client_mesh()
+    results = {"devices": len(jax.devices())}
+
+    rng = np.random.default_rng(0)
+    M, feat, classes, n = 8, 12, 3, 32
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, n))
+    xs = protos[ys] + rng.normal(size=(M, n, feat)).astype(np.float32) * 0.4
+    X, Y = xs, ys.astype(np.int32)
+    data8 = FederatedData(X, Y, jnp.asarray(X), jnp.asarray(Y))
+    data6 = FederatedData(X[:6], Y[:6], jnp.asarray(X[:6]), jnp.asarray(Y[:6]))
+    key = jax.random.PRNGKey(0)
+
+    def compare(name, mk_strategy, schedule=None, data=data8, rounds=8,
+                batch=8, mesh=mesh8):
+        mk_sched = schedule if schedule is not None else (lambda: None)
+        st1, h1 = Engine(mk_strategy(), eval_every=3, schedule=mk_sched()).fit(
+            data, rounds=rounds, key=key, batch_size=batch)
+        st2, h2 = ShardedEngine(mk_strategy(), eval_every=3, mesh=mesh,
+                                schedule=mk_sched()).fit(
+            data, rounds=rounds, key=key, batch_size=batch)
+        results[name] = {
+            "rounds_equal": h1.rounds == h2.rounds,
+            "accuracy_bit_equal": h1.accuracy == h2.accuracy,
+            "accuracy_maxdiff": float(max(abs(a - b) for a, b in
+                                          zip(h1.accuracy, h2.accuracy))),
+            "metrics_maxdiff": float(max(
+                (max(abs(p - q) for p, q in zip(v, h2.metrics[k]))
+                 for k, v in h1.metrics.items()), default=0.0)),
+            "state_bit_equal": tree_bit_equal(st1, st2),
+            "state_maxdiff": tree_maxdiff(st1, st2),
+        }
+
+    dp = DPConfig(clip_norm=1.0)
+    compare("local_full", lambda: LocalStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, dp_cfg=dp, sigma=0.7))
+    compare("local_full_uneven", lambda: LocalStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, dp_cfg=dp, sigma=0.7),
+        data=data6)
+    compare("local_sampling_uneven", lambda: LocalStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5),
+        schedule=lambda: ClientSampling(q=0.5), data=data6)
+
+    compare("fedavg_full", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.5,
+        user_ratio=0.8))
+    compare("fedavg_sampling", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        schedule=lambda: ClientSampling(q=0.6))
+    compare("fedavg_async0", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        schedule=lambda: AsyncStaleness(staleness=0))
+
+    compare("dsgt_full", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5))
+    compare("dsgt_full_uneven", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5),
+        data=data6)
+    compare("dsgt_sampling", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.4),
+        schedule=lambda: ClientSampling(q=0.5))
+    compare("dsgt_async2", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.4),
+        schedule=lambda: AsyncStaleness(staleness=2))
+
+    # ---------------- P4: strategy-level (fixed groups) across schedules ----
+    def p4_cfg(rounds=8):
+        return RunConfig(dp=DPConfig(epsilon=15.0, rounds=rounds,
+                                     sample_rate=0.5),
+                         p4=P4Config(group_size=4, sample_peers=7),
+                         train=TrainConfig(learning_rate=0.5))
+
+    def mk_p4(groups):
+        def mk():
+            strat = P4Strategy(trainer=P4Trainer(feat_dim=feat,
+                                                 num_classes=classes,
+                                                 cfg=p4_cfg()))
+            strat.set_groups([list(g) for g in groups], M)
+            return strat
+        return mk
+
+    spanning = [[0, 2, 4, 6], [1, 3, 5, 7]]   # every group spans 4 slices
+    compare("p4_full_gather", mk_p4(spanning))
+    compare("p4_sampling", mk_p4(spanning),
+            schedule=lambda: ClientSampling(q=0.5))
+    compare("p4_async1", mk_p4(spanning),
+            schedule=lambda: AsyncStaleness(staleness=1))
+
+    # pod-resident groups on a 2-slice mesh: aggregation needs no collective
+    mesh2 = make_client_mesh(2)
+    resident = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    probe = mk_p4(resident)()
+    ctx2 = ClientShardCtx(mesh2, "clients", M)
+    results["p4_resident_layout"] = {
+        "resident_on_2": probe._groups_shard_resident(ctx2),
+        "resident_on_8": probe._groups_shard_resident(
+            ClientShardCtx(mesh8, "clients", M)),
+    }
+    compare("p4_full_resident", mk_p4(resident), mesh=mesh2)
+    compare("p4_sampling_resident", mk_p4(resident), mesh=mesh2,
+            schedule=lambda: ClientSampling(q=0.5))
+
+    # ---------------- P4 end-to-end: bootstrap -> grouping -> co-train ------
+    protos2 = rng.normal(size=(2, 4, 20)).astype(np.float32) * 2
+    protos2[0, :, 10:] = 0
+    protos2[1, :, :10] = 0
+    e_xs, e_ys = [], []
+    for c in range(M):
+        y = rng.integers(0, 4, 48)
+        e_xs.append(protos2[c % 2, y]
+                    + rng.normal(size=(48, 20)).astype(np.float32) * 0.5)
+        e_ys.append(y)
+    EX = np.stack(e_xs)
+    EY = np.stack(e_ys).astype(np.int32)
+
+    def p4_e2e(mesh):
+        tr = P4Trainer(feat_dim=20, num_classes=4, cfg=RunConfig(
+            dp=DPConfig(epsilon=15.0, rounds=12, sample_rate=0.5),
+            p4=P4Config(group_size=4, sample_peers=7),
+            train=TrainConfig(learning_rate=0.5)))
+        st, groups, hist = tr.fit(EX, EY, jnp.asarray(EX), jnp.asarray(EY),
+                                  rounds=12, eval_every=5, mesh=mesh)
+        return st, groups, hist
+
+    st1, g1, h1 = p4_e2e(None)
+    st2, g2, h2 = p4_e2e(mesh8)
+    results["p4_end_to_end"] = {
+        "groups_equal": g1 == g2,
+        "rounds_equal": h1.rounds == h2.rounds,
+        "accuracy_bit_equal": h1.accuracy == h2.accuracy,
+        "state_bit_equal": tree_bit_equal(st1, st2),
+        "metrics_maxdiff": float(max(
+            max(abs(p - q) for p, q in zip(v, h2.metrics[k]))
+            for k, v in h1.metrics.items())),
+    }
+
+    # ---------------- zero-byte accounting for absent clients ---------------
+    def p4_net(mesh):
+        net = P2PNetwork(M)
+        strat = mk_p4(resident)()
+        eng_cls = (lambda **kw: ShardedEngine(strat, mesh=mesh, **kw)) \
+            if mesh is not None else (lambda **kw: Engine(strat, **kw))
+        eng = eng_cls(eval_every=3, network=net,
+                      schedule=ClientSampling(q=0.5))
+        eng.fit(data8, rounds=8, key=key, batch_size=8)
+        return net
+
+    net1, net2 = p4_net(None), p4_net(mesh8)
+    sched = ClientSampling(q=0.5)
+    _, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+    masks = {r: np.asarray(sched.draw_mask(
+        jax.random.fold_in(jax.random.fold_in(phase_key, r), 3), M))
+        for r in range(8)}
+    results["zero_byte_accounting"] = {
+        "messages_equal": net1.num_messages() == net2.num_messages(),
+        "bytes_equal": net1.total_bytes() == net2.total_bytes(),
+        "nonzero": net2.num_messages() > 0,
+        "endpoints_in_cohort": all(
+            masks[m.rnd][m.src] == 1.0 and masks[m.rnd][m.dst] == 1.0
+            for m in net2.log),
+    }
+
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    sys.exit(main())
