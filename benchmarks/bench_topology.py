@@ -1,0 +1,150 @@
+"""Topology-subsystem throughput: rounds/sec and bytes/round of the DP-DSGT
+gossip loop across graph families and densities (ISSUE 5 acceptance).
+
+The mixing step is a sparse neighbor gather inside the scanned round body,
+so denser graphs trade rounds/sec (more gather slots) and bytes/round
+(more alive edges) for spectral gap — the same trade the accuracy sweeps
+(``repro.launch.sweep --topology``) explore. The faulty ring row measures
+the in-jit fault-draw overhead. ``--sharded`` adds the shard_map client-mesh
+column under a forced 8-fake-device CPU mesh (the honest simulation the CI
+job records: it measures collective overhead, not speedup).
+
+Writes ``BENCH_topology.json`` via ``benchmarks/run.py`` (or directly when
+run as a script).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    if "--sharded" in sys.argv[1:] and \
+            "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        # must land before the first jax import below
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=8").strip()
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import topology as topo_lib
+from repro.baselines.dp_dsgt import DPDSGTStrategy
+from repro.core.p2p import P2PNetwork
+from repro.engine import Engine, FederatedData, ShardedEngine
+
+LAST_RECORDS = []
+
+
+def _make_data(M: int, R: int, feat: int, classes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, R))
+    xs = protos[ys] + rng.normal(size=(M, R, feat)).astype(np.float32) * 0.4
+    return xs, ys.astype(np.int32)
+
+
+def _loop_rps(topology, data, rounds: int, batch: int, feat: int,
+              classes: int, mesh=None, seed: int = 0) -> float:
+    strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=0.3,
+                              sigma=0.3, topology=topology)
+    engine = (ShardedEngine(strategy, eval_every=rounds, mesh=mesh)
+              if mesh is not None else Engine(strategy, eval_every=rounds))
+    key = jax.random.PRNGKey(seed)
+
+    def run():
+        state, _ = engine.fit(data, rounds=rounds, key=key, batch_size=batch,
+                              evaluate=False)
+        jax.tree_util.tree_leaves(state)[0].block_until_ready()
+
+    run()                                 # compile the chunk once
+    t0 = time.perf_counter()
+    run()
+    return rounds / (time.perf_counter() - t0)
+
+
+def _bytes_per_round(topology, data, feat: int, classes: int,
+                     seed: int = 0) -> dict:
+    """Measured gossip load over a short accounted run (host-side ledger —
+    independent of the engine flavor, so measured once)."""
+    M = data.num_clients
+    net = P2PNetwork(M)
+    strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=0.3,
+                              sigma=0.3, topology=topology)
+    rounds = 4
+    Engine(strategy, eval_every=rounds - 1, network=net).fit(
+        data, rounds=rounds, key=jax.random.PRNGKey(seed), batch_size=8)
+    return {"bytes_per_round": round(net.total_bytes() / rounds, 1),
+            "messages_per_round": round(net.num_messages() / rounds, 2),
+            "links_used": len(net.per_link())}
+
+
+def run(quick: bool = True, sharded: bool = False):
+    rows = []
+    LAST_RECORDS.clear()
+    M, R, feat, classes = (16, 96, 64, 10) if quick else (32, 160, 1024, 10)
+    rounds = 100 if quick else 200
+    batch = 24
+    X, Y = _make_data(M, R, feat, classes)
+    data = FederatedData(X, Y, jnp.asarray(X), jnp.asarray(Y))
+
+    topologies = [
+        ("ring", topo_lib.ring(M)),
+        ("kregular4", topo_lib.k_regular(M, 4)),
+        ("kregular8", topo_lib.k_regular(M, 8)),
+        ("exponential", topo_lib.exponential(M)),
+        ("full", topo_lib.fully_connected(M)),
+        ("ring_drop0.2", topo_lib.ring(M).with_faults(0.2, 0.05)),
+        ("gossip_seq", topo_lib.gossip_matchings(M, period=8)),
+    ]
+
+    mesh = None
+    n_dev = len(jax.devices())
+    if sharded or n_dev > 1:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh()
+
+    base_rps = None
+    for name, topo in topologies:
+        rps = _loop_rps(topo, data, rounds, batch, feat, classes)
+        if base_rps is None:
+            base_rps = rps
+        load = _bytes_per_round(topo, data, feat, classes)
+        rec = {"name": name, "rounds_per_sec": round(rps, 2),
+               "vs_ring": round(rps / base_rps, 3),
+               "spectral_gap": topo.describe()["spectral_gap"],
+               "edges": topo.describe()["edges"],
+               **load, "M": M, "rounds": rounds, "batch": batch}
+        if mesh is not None:
+            srps = _loop_rps(topo, data, rounds, batch, feat, classes,
+                             mesh=mesh)
+            rec["sharded_rounds_per_sec"] = round(srps, 2)
+            rec["devices"] = n_dev
+        rows.append((f"topology_{name}_rps", 1e6 / rps, round(rps, 1)))
+        LAST_RECORDS.append(rec)
+        extra = (f" sharded={rec['sharded_rounds_per_sec']:.1f} r/s"
+                 if "sharded_rounds_per_sec" in rec else "")
+        print(f"[topology] {name}: {rps:.1f} r/s "
+              f"gap={rec['spectral_gap']} "
+              f"{rec['bytes_per_round']:.0f} B/round{extra}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    _quick = "--full" not in sys.argv[1:]
+    rows = run(quick=_quick, sharded="--sharded" in sys.argv[1:])
+    for r in rows:
+        print(",".join(map(str, r)))
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_topology.json")
+    with open(out_path, "w") as f:
+        json.dump({"platform": jax.default_backend(), "quick": _quick,
+                   "entries": LAST_RECORDS}, f, indent=2)
+    print(f"wrote {out_path}")

@@ -8,6 +8,7 @@
   bench_kernels        (framework)     Pallas-vs-oracle microbench
   bench_engine         (framework)     scan round loop vs legacy Python loop
   bench_schedule       (framework)     round schedules vs the PR-2 loop
+  bench_topology       (framework)     gossip loop vs graph family/density
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
 Suites exposing ``LAST_RECORDS`` also write ``BENCH_<suite>.json``.
@@ -36,11 +37,12 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
                             bench_kernels, bench_overhead, bench_privacy,
-                            bench_roofline, bench_schedule)
+                            bench_roofline, bench_schedule, bench_topology)
     suites = {
         "kernels": bench_kernels,
         "engine": bench_engine,
         "schedule": bench_schedule,
+        "topology": bench_topology,
         "overhead": bench_overhead,
         "roofline": bench_roofline,
         "privacy": bench_privacy,

@@ -1,11 +1,21 @@
 """DP-DSGT (Bayrooti et al. [4]): differentially-private decentralized SGD
-with gradient tracking over a ring topology — consensus-seeking (one shared
-solution), which is exactly what the paper argues fails under non-IID tasks.
+with gradient tracking — consensus-seeking (one shared solution), which is
+exactly what the paper argues fails under non-IID tasks.
 
   x_i ← Σ_j W_ij x̃_j − lr · y_i
   y_i ← Σ_j W_ij ỹ_j + (g_i(x⁺) − g_i(x))
 
-where x̃/ỹ are the DP-noised (clipped) shared quantities.
+where x̃/ỹ are the DP-noised (clipped) shared quantities and W is the
+mixing matrix of the communication graph.
+
+The paper's W is the ring with self weight 1/2 and 1/4 per neighbor; here W
+comes from the topology subsystem (``repro.topology``), so DSGT runs over
+any graph family — ring / torus / expander / Erdős–Rényi / time-varying
+gossip — with in-jit link faults. ``topology=None`` builds the historical
+ring at ``init``, and the compiled ring plan's mixing arithmetic is
+bit-identical to the pre-refactor ``_ring_mix`` (the ring is literally the
+special case of the general sparse mixing step — locked down in
+``tests/test_topology.py``).
 
 Engine form: state = {params, tracker, last gradients}; the tracker is
 bootstrapped in ``init`` from a first on-device batch draw.
@@ -13,6 +23,7 @@ bootstrapped in ``init`` from a first on-device batch draw.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,43 +36,6 @@ from repro.engine import (Engine, FederatedData, FullParticipation,
                           runtime_sigma, sample_client_batches)
 
 
-def _mix_arith(t, left, right, self_w: float):
-    """The W row applied to (self, left-neighbor, right-neighbor) values —
-    one shared expression so the single-device roll, the gather fallback and
-    the ppermute halo produce bit-identical arithmetic."""
-    return self_w * t + (1 - self_w) / 2 * (left + right)
-
-
-def _ring_mix(stacked, self_w: float = 0.5):
-    """W = ring with self weight 1/2 and 1/4 to each neighbor."""
-    def mix(t):
-        return _mix_arith(t, jnp.roll(t, 1, axis=0), jnp.roll(t, -1, axis=0),
-                          self_w)
-    return jax.tree_util.tree_map(mix, stacked)
-
-
-def _ring_mix_sharded(stacked, ctx, self_w: float = 0.5):
-    """Ring gossip as an explicit collective: each shard ppermutes its edge
-    rows to its mesh neighbors (a halo exchange — the communication pattern a
-    real gossip round has). Valid only when the global ring lines up with the
-    shard boundaries (no padding); the uneven case falls back to
-    gather → roll → re-shard, which is exact for any M."""
-    if ctx.M_pad != ctx.M:
-        full = ctx.gather(stacked)
-        return ctx.scatter_like(_ring_mix(full, self_w), full)
-    fwd = [(i, (i + 1) % ctx.n) for i in range(ctx.n)]
-    bwd = [(i, (i - 1) % ctx.n) for i in range(ctx.n)]
-
-    def mix(t):
-        prev_last = jax.lax.ppermute(t[-1:], ctx.axis, fwd)
-        next_first = jax.lax.ppermute(t[:1], ctx.axis, bwd)
-        left = jnp.concatenate([prev_last, t[:-1]], axis=0)
-        right = jnp.concatenate([t[1:], next_first], axis=0)
-        return _mix_arith(t, left, right, self_w)
-
-    return jax.tree_util.tree_map(mix, stacked)
-
-
 @register_strategy("dp_dsgt")
 @dataclass(eq=False)
 class DPDSGTStrategy(Strategy):
@@ -70,11 +44,29 @@ class DPDSGTStrategy(Strategy):
     lr: float = 0.3
     clip: float = 1.0
     sigma: float = 0.0
+    # communication graph (repro.topology.Topology / TimeVaryingTopology,
+    # hashable by value → part of the chunk-cache fingerprint); None builds
+    # the paper's ring over the run's M clients at init
+    topology: Optional[object] = None
 
     def __post_init__(self):
         self.specs, self.apply_fn = common.make_model(self.feat_dim,
                                                       self.num_classes)
 
+    # ------------------------------------------------------------- topology
+    def _ensure_plan(self, M: int) -> None:
+        from repro.topology.graphs import ring
+        from repro.topology.mixing import make_plan
+        if self.topology is None:
+            self.topology = ring(M)          # the paper's default graph
+        if self.topology.M != M:
+            raise ValueError(
+                f"topology is over {self.topology.M} clients but the run has "
+                f"M={M}")
+        if self._mix_plan is None or self._mix_plan.topology is not self.topology:
+            self._mix_plan = make_plan(self.topology)
+
+    # ------------------------------------------------------------ gradients
     def _grads_keyed(self, params, xs, ys, keys):
         def one(p, x, y, k):
             return common.client_grad(self.apply_fn, p, x, y, k,
@@ -86,7 +78,9 @@ class DPDSGTStrategy(Strategy):
         M = ys.shape[0]
         return self._grads_keyed(params, xs, ys, jax.random.split(key, M))
 
+    # ---------------------------------------------------------------- hooks
     def init(self, key, data: FederatedData, batch_size):
+        self._ensure_plan(data.num_clients)
         k1, k2, k3 = jax.random.split(key, 3)
         x_params = common.init_clients(self.specs, k1, data.num_clients)
         xs0, ys0 = sample_client_batches(data.train_x, data.train_y, k2,
@@ -98,25 +92,29 @@ class DPDSGTStrategy(Strategy):
                 "g": jax.tree_util.tree_map(jnp.copy, y_track)}
 
     def local_update(self, state, xs, ys, r, key):
-        x_new = _ring_mix(state["x"])
+        # one communication round = one realized graph: both mixes share the
+        # round's fault realization (drawn in-jit off key's fault stream)
+        x_new = self.mix(state["x"], r, key)
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
         g_new = self._grads(x_new, xs, ys, key)
-        y_new = _ring_mix(state["y"])
+        y_new = self.mix(state["y"], r, key)
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
         return {"x": x_new, "y": y_new, "g": g_new}, {}
 
     def sharded_local_update(self, state, xs, ys, r, key, ctx):
-        """The gossip (ring mix) crosses client-shard boundaries, so it runs
-        as a ppermute halo exchange; gradients are per-client with the global
-        key split's shard slice. Bit-identical to ``local_update`` on the
-        gathered stacks (same ``_mix_arith`` on the same neighbor values)."""
-        x_new = _ring_mix_sharded(state["x"], ctx)
+        """The gossip crosses client-shard boundaries, so it runs as a
+        ppermute halo exchange (shard-aligned ring), a slice-local gather
+        (shard-resident edges) or a gather round-trip (anything else);
+        gradients are per-client with the global key split's shard slice.
+        Same mixing arithmetic on the same neighbor values as
+        ``local_update`` — see ``repro.topology.mixing``."""
+        x_new = self.mix_sharded(state["x"], r, key, ctx)
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
         g_new = self._grads_keyed(x_new, xs, ys, ctx.shard_keys(key))
-        y_new = _ring_mix_sharded(state["y"], ctx)
+        y_new = self.mix_sharded(state["y"], r, key, ctx)
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
         return {"x": x_new, "y": y_new, "g": g_new}, {}
@@ -124,11 +122,33 @@ class DPDSGTStrategy(Strategy):
     def eval_params(self, state):
         return state["x"]
 
+    # ------------------------------------------------------ byte accounting
+    def log_communication(self, net, state, r: int, mask=None,
+                          phase_key=None) -> None:
+        """§4.5-style gossip accounting: every alive directed edge carries
+        the sender's BOTH shared quantities — the noised model x̃ and the
+        gradient tracker ỹ (one exchange per round mixes both, see
+        ``local_update``). Absent cohort members (sampling schedule) and
+        dropped links / churned nodes (the round's fault realization,
+        re-derived from ``phase_key``) contribute zero bytes."""
+        if self._mix_plan is None or self.topology is None:
+            return
+        keep = None
+        if self._mix_plan.faulty and phase_key is not None:
+            from repro.topology.faults import host_fault_masks
+            keep, _ = host_fault_masks(phase_key, r, 1, self._mix_plan.M,
+                                       self._mix_plan.drop_prob,
+                                       self._mix_plan.churn_prob)
+        from repro.topology.accounting import log_gossip_round
+        log_gossip_round(net, self.topology,
+                         {"x": state["x"], "y": state["y"]}, r, mask=mask,
+                         keep=keep)
+
 
 def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.3,
           batch_size: int = 32, seed: int = 0, eval_every: int = 20,
           epsilon: float = 15.0, delta: float = None, clip: float = 1.0,
-          dp: bool = True, schedule=None):
+          dp: bool = True, schedule=None, topology=None, network=None):
     M, R = train_y.shape[:2]
     feat, classes = train_x.shape[-1], int(jnp.max(jnp.asarray(train_y))) + 1
     delta = delta or 1.0 / R
@@ -142,10 +162,11 @@ def train(train_x, train_y, test_x, test_y, *, rounds: int = 100, lr: float = 0.
               if dp else None)
 
     strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=lr,
-                              clip=clip, sigma=sigma if dp else 0.0)
+                              clip=clip, sigma=sigma if dp else 0.0,
+                              topology=topology)
     data = FederatedData(train_x, train_y, test_x, test_y)
     state, hist = Engine(strategy, eval_every=eval_every, schedule=schedule,
-                         ledger=ledger).fit(
+                         ledger=ledger, network=network).fit(
         data, rounds=rounds, key=jax.random.PRNGKey(seed),
         batch_size=batch_size)
     return state["x"], hist, sigma

@@ -31,6 +31,12 @@ class FedAvgStrategy(Strategy):
     sigma: float = 0.0
     local_steps: int = 1
     user_ratio: float = 1.0
+    # sharded cohort reduction: "psum" = per-shard partial weighted sums
+    # tree-reduced with one lax.psum (no (M, ...) stack ever materializes on
+    # a single slice — bit-close to the gather path, verified in
+    # tests/test_sharded_engine.py); "gather" = all_gather → single-device
+    # aggregate verbatim (bit-exact but O(M) memory per slice)
+    reduce: str = "psum"
 
     def __post_init__(self):
         self.specs, self.apply_fn = common.make_model(self.feat_dim,
@@ -65,17 +71,22 @@ class FedAvgStrategy(Strategy):
         # mesh; only the mid-round (M, ...) local-update stacks are sharded
         return False
 
-    def aggregate(self, clients, r, key):
-        """Strategy-level user sampling (the pre-schedule path; NOT
-        amplification-accounted — prefer an engine ClientSampling schedule
-        for that). The empty draw falls back to one random participant so
-        the global model is always defined."""
-        M = jax.tree_util.tree_leaves(clients)[0].shape[0]
+    def _user_mask(self, key, M):
+        """Strategy-level user sampling draw — shared by the single-device
+        aggregate and the psum path so both realize the identical cohort.
+        The empty draw falls back to one random participant so the global
+        model is always defined."""
         k1, k2 = jax.random.split(key)
         mask = (jax.random.uniform(k1, (M,)) < self.user_ratio).astype(jnp.float32)
         fallback = jnp.zeros((M,)).at[jax.random.randint(k2, (), 0, M)].set(1.0)
-        mask = jnp.where(jnp.sum(mask) > 0, mask, fallback)
-        return self.aggregate_masked(clients, r, key, mask)
+        return jnp.where(jnp.sum(mask) > 0, mask, fallback)
+
+    def aggregate(self, clients, r, key):
+        """Strategy-level user sampling (the pre-schedule path; NOT
+        amplification-accounted — prefer an engine ClientSampling schedule
+        for that)."""
+        M = jax.tree_util.tree_leaves(clients)[0].shape[0]
+        return self.aggregate_masked(clients, r, key, self._user_mask(key, M))
 
     def merge_participation(self, prev_state, new_state, mask):
         # server-style state: the cohort is applied as aggregation weights,
@@ -89,6 +100,36 @@ class FedAvgStrategy(Strategy):
         w = mask / jnp.maximum(jnp.sum(mask), 1.0)
         return jax.tree_util.tree_map(
             lambda n: jnp.einsum("m...,m->...", n, w), clients)
+
+    # ------------------------------------------------------- sharded engine
+    def _psum_mean(self, clients, w_full, ctx):
+        """Cohort mean as a psum tree-reduction: every shard contracts its
+        own client rows against its slice of the full (M,) weight vector
+        (padded slots carry weight 0), then one lax.psum combines the
+        partials. The (M, ...) stack never materializes on a slice — the
+        reduction is O(model) per shard instead of the gather's O(M·model)."""
+        local_w = ctx.shard_rows(w_full)
+        partial = jax.tree_util.tree_map(
+            lambda t: jnp.einsum("m...,m->...", t, local_w), clients)
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t, ctx.axis), partial)
+
+    def sharded_aggregate(self, clients, r, key, ctx):
+        if self.reduce == "gather":
+            full = ctx.gather(clients)
+            return ctx.scatter_like(self.aggregate(full, r, key), full)
+        # identical (replicated) user-sampling draw to the single-device path
+        mask = self._user_mask(key, ctx.M)
+        return self._psum_mean(clients, mask / jnp.maximum(jnp.sum(mask), 1.0),
+                               ctx)
+
+    def sharded_aggregate_masked(self, clients, r, key, ctx, mask, local_mask):
+        if self.reduce == "gather":
+            full = ctx.gather(clients)
+            return ctx.scatter_like(self.aggregate_masked(full, r, key, mask),
+                                    full)
+        return self._psum_mean(clients, mask / jnp.maximum(jnp.sum(mask), 1.0),
+                               ctx)
 
     def eval_params(self, state):
         return state  # unused: evaluate() broadcasts

@@ -43,7 +43,7 @@ class ProxyFLStrategy(Strategy):
                 "proxy": common.init_clients(self.specs,
                                              jax.random.fold_in(key, 1), M)}
 
-    def local_update(self, state, xs, ys, r, key):
+    def local_update_keyed(self, state, xs, ys, r, keys):
         apply_fn = self.apply_fn
 
         def one(theta, w, x, y, k):
@@ -66,13 +66,23 @@ class ProxyFLStrategy(Strategy):
             return (common.sgd_update(theta, g_t, self.lr),
                     common.sgd_update(w, g_w, self.lr))
 
-        M = ys.shape[0]
         private, proxy = jax.vmap(one)(state["private"], state["proxy"], xs, ys,
-                                       jax.random.split(key, M))
+                                       keys)
         return {"private": private, "proxy": proxy}, {}
 
+    def local_update(self, state, xs, ys, r, key):
+        M = ys.shape[0]
+        return self.local_update_keyed(state, xs, ys, r,
+                                       jax.random.split(key, M))
+
     def aggregate(self, state, r, key):
-        """Receive neighbor's proxy (directed exponential graph), average."""
+        """Receive neighbor's proxy (directed exponential graph), average.
+
+        Under the sharded engine the default ``Strategy.sharded_aggregate``
+        gathers the full (M, ...) stacks and runs this verbatim — the
+        exponential-graph shift crosses shard boundaries, and the gather
+        keeps the modulus at the TRUE client count (inside the shard region
+        the local leading dim would be m, silently shrinking the graph)."""
         # M is a static shape, so log2m is a trace-time constant — derived
         # here (not in init) so engine-resumed external states work too
         M = jax.tree_util.tree_leaves(state["proxy"])[0].shape[0]

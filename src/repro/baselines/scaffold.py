@@ -42,7 +42,7 @@ class ScaffoldStrategy(Strategy):
         return {"global": gp, "c_global": zeros,
                 "c_clients": common.broadcast_like(zeros, data.num_clients)}
 
-    def local_update(self, state, xs, ys, r, key):
+    def local_update_keyed(self, state, xs, ys, r, keys):
         M = ys.shape[0]
         params0 = common.broadcast_like(state["global"], M)
         c_global = state["c_global"]
@@ -64,14 +64,32 @@ class ScaffoldStrategy(Strategy):
                 ci, c_global, p0, pK)
             return pK, new_ci
 
-        newp, newc = jax.vmap(one)(params0, state["c_clients"], xs, ys,
-                                   jax.random.split(key, M))
+        newp, newc = jax.vmap(one)(params0, state["c_clients"], xs, ys, keys)
         return {"clients": newp, "c_clients": newc,
                 "c_global": c_global}, {}
+
+    def local_update(self, state, xs, ys, r, key):
+        M = ys.shape[0]
+        return self.local_update_keyed(state, xs, ys, r,
+                                       jax.random.split(key, M))
 
     def aggregate(self, mid, r, key):
         return {"global": common.tree_mean(mid["clients"]),
                 "c_global": common.tree_mean(mid["c_clients"]),
+                "c_clients": mid["c_clients"]}
+
+    # ------------------------------------------------------- sharded engine
+    # The carry mixes a client-stacked leaf (c_clients) with replicated
+    # server leaves (global, c_global): state_client_stacked stays True and
+    # the exact-size spec match shards only the (M, ...) leaf. The mid-round
+    # tree swaps "global" for the trained "clients" stack, so the default
+    # gather round-trip cannot be reused — these hooks gather the two
+    # stacked subtrees explicitly and run the single-device means verbatim
+    # (bit-exact), keeping c_clients shard-resident throughout.
+
+    def sharded_aggregate(self, mid, r, key, ctx):
+        return {"global": common.tree_mean(ctx.gather(mid["clients"])),
+                "c_global": common.tree_mean(ctx.gather(mid["c_clients"])),
                 "c_clients": mid["c_clients"]}
 
     def merge_participation(self, prev_state, new_state, mask):
@@ -90,6 +108,14 @@ class ScaffoldStrategy(Strategy):
             lambda t: jnp.einsum("m...,m->...", t, w), stacked)
         return {"global": wmean(mid["clients"]),
                 "c_global": wmean(mid["c_clients"]),
+                "c_clients": mid["c_clients"]}
+
+    def sharded_aggregate_masked(self, mid, r, key, ctx, mask, local_mask):
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        wmean = lambda stacked: jax.tree_util.tree_map(
+            lambda t: jnp.einsum("m...,m->...", t, w), stacked)
+        return {"global": wmean(ctx.gather(mid["clients"])),
+                "c_global": wmean(ctx.gather(mid["c_clients"])),
                 "c_clients": mid["c_clients"]}
 
     def eval_params(self, state):

@@ -7,6 +7,7 @@ Everything a run needs is described by frozen dataclasses:
   P4Config     — the paper's technique: grouping + proxy/private co-training
   MeshConfig   — device mesh (single-pod / multi-pod)
   ScheduleConfig — round schedule (full / sampling / async) + DP accounting
+  TopologyConfig — P2P communication graph + mixing weights + link faults
   KernelConfig — Pallas/jnp kernel backend selection + autotuning
   TrainConfig  — optimizer/schedule/steps
   RunConfig    — the composed top-level config consumed by launch scripts
@@ -162,6 +163,29 @@ class P4Config:
 
 
 @dataclass(frozen=True)
+class TopologyConfig:
+    """Communication graph for the P2P layer (``repro.topology``).
+
+    ``family="none"`` keeps each strategy's built-in pattern (DP-DSGT's
+    ring, P4's group-internal mean). Any other family builds an explicit
+    graph + doubly-stochastic mixing matrix: DP-DSGT gossips over it, P4
+    routes its group messages along its shortest paths (per-link byte/hop
+    accounting) and — with fault rates — drops member↔aggregator exchanges.
+    """
+    family: str = "none"    # none | ring | full | torus | kregular |
+                            # exponential | erdos | smallworld | group | gossip
+    k: int = 4              # degree (kregular / smallworld base lattice)
+    p: float = 0.3          # erdos edge prob / smallworld rewire prob
+    self_weight: float = 0.5   # lazy self weight for uniform weighting
+    weighting: str = "metropolis"  # metropolis | uniform (regular graphs)
+    drop_prob: float = 0.0  # per-round undirected-link failure probability
+    churn_prob: float = 0.0  # per-round node-offline probability
+    period: int = 8         # gossip family: matchings per cycle
+    bridge: bool = True     # group family: ring bridge between groups
+    seed: int = 0           # random-family construction seed
+
+
+@dataclass(frozen=True)
 class ScheduleConfig:
     """Round schedule + engine-native privacy accounting
     (``repro.engine.schedule`` / ``repro.engine.accounting``)."""
@@ -260,6 +284,7 @@ class RunConfig:
     p4: P4Config = field(default_factory=P4Config)
     kernels: KernelConfig = field(default_factory=KernelConfig)
     schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
+    topology: TopologyConfig = field(default_factory=TopologyConfig)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ class Message:
     kind: str
     nbytes: int
     rnd: int = -1      # round the message belongs to; -1 = not round-stamped
+    hop: int = 0       # position along a multi-hop relay route; 0 = first link
 
 
 @dataclass
@@ -36,11 +37,13 @@ class P2PNetwork:
     log: List[Message] = field(default_factory=list)
 
     def send(self, src: int, dst: int, payload: Any, kind: str,
-             rnd: int = -1) -> int:
-        """Serialize exactly as the paper (pickle of numpy weights)."""
+             rnd: int = -1, hop: int = 0) -> int:
+        """Serialize exactly as the paper (pickle of numpy weights). One call
+        = one physical link traversal; relayed messages log one call per hop
+        (``repro.topology.accounting.send_routed``)."""
         host = jax.tree_util.tree_map(np.asarray, payload)
         nbytes = len(pickle.dumps(host, protocol=4))
-        self.log.append(Message(src, dst, kind, nbytes, rnd))
+        self.log.append(Message(src, dst, kind, nbytes, rnd, hop))
         return nbytes
 
     def total_bytes(self, kind: str | None = None) -> int:
@@ -48,6 +51,27 @@ class P2PNetwork:
 
     def num_messages(self, kind: str | None = None) -> int:
         return sum(1 for m in self.log if kind is None or m.kind == kind)
+
+    # ------------------------------------------------- per-link accounting
+    def per_link(self, kind: str | None = None) -> Dict[tuple, int]:
+        """Bytes per directed physical link — the load-balance view a real
+        deployment cares about (a relay-heavy topology concentrates traffic
+        on bridge links even when per-client message counts look even)."""
+        out: Dict[tuple, int] = {}
+        for m in self.log:
+            if kind is None or m.kind == kind:
+                out[(m.src, m.dst)] = out.get((m.src, m.dst), 0) + m.nbytes
+        return out
+
+    def total_hops(self, kind: str | None = None) -> int:
+        """Physical link traversals (every Message is exactly one)."""
+        return self.num_messages(kind)
+
+    def relayed_messages(self, kind: str | None = None) -> int:
+        """Traversals beyond each logical message's first hop — the pure
+        relay overhead a sparse topology pays over all-to-all."""
+        return sum(1 for m in self.log
+                   if (kind is None or m.kind == kind) and m.hop > 0)
 
 
 def aggregator_for_round(group: List[int], rnd: int, rotation: int = 1) -> int:
@@ -70,15 +94,28 @@ def simulate_group_round(net: P2PNetwork, group: List[int], proxy_params,
     return {"aggregator": agg, "messages": 2 * (len(group) - 1)}
 
 
-def simulate_phase1(net: P2PNetwork, client_weights, sample_pairs) -> float:
+def simulate_phase1(net: P2PNetwork, client_weights, sample_pairs,
+                    topology=None) -> float:
     """Phase-1 communication: each sampled pair exchanges model weights once
     (initiator sends; paper §4.5 measures the 622.82 kB weight message).
 
     ``client_weights`` is the stacked (M, ...) client pytree; each initiator
     i sends ONLY its own (D,) slice — sending the full stack would log M×
-    the paper's per-message figure."""
+    the paper's per-message figure.
+
+    ``topology`` (a ``repro.topology.Topology``) routes each exchange over
+    the physical graph: non-adjacent pairs relay along shortest paths and
+    every link traversal is logged (per-link byte/hop accounting)."""
+    dist = next_hop = None
+    if topology is not None:
+        from repro.topology.accounting import shortest_hops
+        dist, next_hop = shortest_hops(topology.adjacency)
     t0 = time.perf_counter()
     for (i, j) in sample_pairs:
         own = jax.tree_util.tree_map(lambda t: t[i], client_weights)
-        net.send(i, j, own, "phase1_weights")
+        if next_hop is None:
+            net.send(i, j, own, "phase1_weights")
+        else:
+            from repro.topology.accounting import send_routed
+            send_routed(net, i, j, own, "phase1_weights", -1, dist, next_hop)
     return time.perf_counter() - t0

@@ -277,6 +277,10 @@ class P4Trainer:
         if groups is None:
             groups = self.form_groups(states, seed)
         strategy.set_groups(groups, M)
+        topo_cfg = getattr(self.cfg, "topology", None)
+        if topo_cfg is not None and topo_cfg.family != "none":
+            from repro.topology import make_topology
+            strategy.set_topology(make_topology(topo_cfg, M, groups=groups))
 
         engine = make_engine(eval_every=eval_every, network=network,
                              checkpoint_dir=checkpoint_dir, schedule=schedule,
@@ -311,7 +315,56 @@ class P4Strategy(Strategy):
         self.groups = groups
         self.ids = jnp.asarray(group_ids(groups, M))
         self.num_groups = len(groups)
+        # padded member table for the in-jit rotating-aggregator lookup the
+        # topology fault masks need: members[g, (r // rotation) % size_g]
+        tmax = max(len(g) for g in groups)
+        members = np.zeros((len(groups), tmax), np.int32)
+        sizes = np.zeros((len(groups),), np.int32)
+        for gi, g in enumerate(groups):
+            members[gi, : len(g)] = g
+            sizes[gi] = len(g)
+        self._group_members = jnp.asarray(members)
+        self._group_sizes = jnp.asarray(sizes)
         self.cache_token += 1    # aggregate() changed: invalidate engine chunks
+
+    # ------------------------------------------------------------- topology
+    def set_topology(self, topology) -> None:
+        """Install the physical communication graph: group messages route
+        along its shortest paths (per-link byte/hop accounting) and, with
+        fault rates, member↔aggregator exchanges drop in-jit per round."""
+        super().set_topology(topology)
+        self._routing = None
+        if topology is not None:
+            from repro.topology.accounting import shortest_hops
+            adj = (topology.union_adjacency()
+                   if hasattr(topology, "topologies") else topology.adjacency)
+            self._routing = shortest_hops(adj)
+
+    def _has_faults(self) -> bool:
+        t = self.topology
+        return t is not None and (t.drop_prob > 0 or t.churn_prob > 0)
+
+    def _aggregator_ids(self, r):
+        """(M,) aggregator id per client at round r (traced) — the in-jit
+        twin of ``p2p.aggregator_for_round`` over each client's own group."""
+        rotation = max(self.trainer.cfg.p4.aggregator_rotation, 1)
+        idx = (r // rotation) % self._group_sizes
+        agg_per_group = self._group_members[
+            jnp.arange(self.num_groups), idx]
+        return agg_per_group[self.ids]
+
+    def _fault_mask(self, r, key):
+        """(M,) float32: 1 iff the client can reach this round's group
+        aggregator — both endpoints up and the link alive. A churned
+        aggregator takes its whole group's round down (every member masks to
+        0, so the group mean leaves everyone untouched)."""
+        from repro.topology.faults import draw_fault_masks
+        M = self.ids.shape[0]
+        t = self.topology
+        keep, up = draw_fault_masks(key, M, t.drop_prob, t.churn_prob)
+        agg = self._aggregator_ids(r)
+        rows = jnp.arange(M)
+        return jnp.where(rows == agg, up, keep[rows, agg])
 
     def init(self, key, data: FederatedData, batch_size):
         return self.trainer.init_clients(key, data.num_clients)
@@ -326,14 +379,25 @@ class P4Strategy(Strategy):
     def aggregate(self, states, r, key):
         if self.ids is None:          # bootstrap phase: no groups yet
             return states
+        if self._has_faults():
+            # fault-injected round: only members whose link to this round's
+            # aggregator survived exchange proxies (same masked-mean math as
+            # partial participation — a dropped member keeps its own proxy)
+            fm = self._fault_mask(r, key)
+            return {"private": states["private"],
+                    "proxy": masked_group_mean(states["proxy"], self.ids,
+                                               self.num_groups, fm)}
         return {"private": states["private"],
                 "proxy": group_mean(states["proxy"], self.ids, self.num_groups)}
 
     def aggregate_masked(self, states, r, key, mask):
         """Partial participation: the group mean runs over the round's cohort
-        only — absent members' proxies are neither read nor overwritten."""
+        only — absent members' proxies are neither read nor overwritten.
+        Link faults compose multiplicatively with the cohort mask."""
         if self.ids is None:
             return states
+        if self._has_faults():
+            mask = mask * self._fault_mask(r, key)
         return {"private": states["private"],
                 "proxy": masked_group_mean(states["proxy"], self.ids,
                                            self.num_groups, mask)}
@@ -363,11 +427,16 @@ class P4Strategy(Strategy):
             # slice. masked_group_mean with the validity mask reproduces
             # group_mean's arithmetic bit-for-bit for real rows (counts are
             # identical, x·1.0 is exact) while padded rows keep their value.
+            # Fault draws are replicated (same key on every slice), so the
+            # sliced fault mask realizes the identical topology everywhere.
+            if self._has_faults():
+                local = ctx.shard_rows(self._fault_mask(r, key))
+            else:
+                local = ctx.valid_mask()
             return {"private": states["private"],
                     "proxy": masked_group_mean(states["proxy"],
                                                self._local_ids(ctx),
-                                               self.num_groups,
-                                               ctx.valid_mask())}
+                                               self.num_groups, local)}
         full = ctx.gather(states)
         return ctx.scatter_like(self.aggregate(full, r, key), full)
 
@@ -376,10 +445,13 @@ class P4Strategy(Strategy):
             return states
         if self._groups_shard_resident(ctx):
             # local_mask is already zero on padded slots
+            local = local_mask
+            if self._has_faults():
+                local = local * ctx.shard_rows(self._fault_mask(r, key))
             return {"private": states["private"],
                     "proxy": masked_group_mean(states["proxy"],
                                                self._local_ids(ctx),
-                                               self.num_groups, local_mask)}
+                                               self.num_groups, local)}
         full = ctx.gather(states)
         return ctx.scatter_like(self.aggregate_masked(full, r, key, mask),
                                 full)
@@ -392,12 +464,13 @@ class P4Strategy(Strategy):
         t, cfg = self.trainer, self.trainer.cfg
         groups = (None if self.groups is None
                   else tuple(tuple(g) for g in self.groups))
+        topo = None if self.topology is None else self.topology.fingerprint()
         return ("p4", self.cache_token, t.model, t.feat_dim, t.num_classes,
                 t.cnn_shape, cfg.p4, cfg.kernels, cfg.train.learning_rate,
                 cfg.dp.enabled, cfg.dp.clip_norm, cfg.dp.local_steps,
                 cfg.dp.microbatches, cfg.dp.per_example_chunk,
                 isinstance(t.sigma, (int, float)) and t.sigma > 0,
-                groups, self.num_groups)
+                groups, self.num_groups, topo)
 
     def runtime_params(self):
         sigma = self.trainer.sigma
@@ -415,24 +488,63 @@ class P4Strategy(Strategy):
         """Per-client PERSONALIZED (private) model."""
         return states["private"]
 
-    def log_communication(self, net, states, r: int, mask=None) -> None:
+    def log_communication(self, net, states, r: int, mask=None,
+                          phase_key=None) -> None:
         """§4.5 Phase-2 accounting: members → rotating aggregator → members,
         one per-client proxy payload per message (matches
         ``p2p.simulate_group_round`` for the same groups — tested). Under a
         sampling schedule only the round's cohort exchanges messages: an
         absent client contributes zero bytes, and a group with fewer than two
-        present members has nothing to aggregate."""
+        present members has nothing to aggregate.
+
+        With a topology installed, messages route over the physical graph's
+        shortest paths (one ``Message`` per link traversal — per-link
+        byte/hop accounting), the aggregator is this round's full-group
+        rotation (the same one the traced fault mask addresses), and the
+        round's fault realization — re-derived from ``phase_key`` — zeroes
+        the dropped member↔aggregator exchanges."""
         if not self.groups:
             return
-        from repro.core.p2p import simulate_group_round
         rotation = self.trainer.cfg.p4.aggregator_rotation
+        if self.topology is None:
+            from repro.core.p2p import simulate_group_round
+            for g in self.groups:
+                present = g if mask is None else [i for i in g if mask[i] > 0]
+                if len(present) < 2:
+                    continue
+                payload = jax.tree_util.tree_map(lambda t: t[g[0]],
+                                                 states["proxy"])
+                simulate_group_round(net, present, payload, rnd=r,
+                                     rotation=rotation)
+            return
+        from repro.core.p2p import aggregator_for_round
+        from repro.topology.accounting import send_routed
+        keep = up = None
+        if self._has_faults() and phase_key is not None:
+            from repro.topology.faults import host_fault_masks
+            keep, up = host_fault_masks(phase_key, r, 2, self.ids.shape[0],
+                                        self.topology.drop_prob,
+                                        self.topology.churn_prob)
+        dist, next_hop = self._routing
         for g in self.groups:
-            present = g if mask is None else [i for i in g if mask[i] > 0]
-            if len(present) < 2:
+            agg = aggregator_for_round(g, r, rotation)
+            if up is not None and up[agg] <= 0:
+                continue                  # churned aggregator: group idles
+            present = [i for i in g
+                       if (mask is None or mask[i] > 0)
+                       and (i == agg or keep is None or keep[i, agg] > 0)]
+            if len(present) < 2 or agg not in present:
                 continue
-            payload = jax.tree_util.tree_map(lambda t: t[g[0]], states["proxy"])
-            simulate_group_round(net, present, payload, rnd=r,
-                                 rotation=rotation)
+            payload = jax.tree_util.tree_map(lambda t: t[g[0]],
+                                             states["proxy"])
+            for i in present:
+                if i != agg:
+                    send_routed(net, i, agg, payload, "proxy_update", r,
+                                dist, next_hop)
+            for i in present:
+                if i != agg:
+                    send_routed(net, agg, i, payload, "aggregated_model", r,
+                                dist, next_hop)
 
 
 # ---------------------------------------------------------------------------

@@ -274,7 +274,8 @@ class Engine:
         for ev in boundaries:
             state, metrics, aux = self.run_rounds(state, data, phase_key,
                                                   cursor, ev + 1, batch_size)
-            self._log_network(state, cursor, ev, aux.get("participation"))
+            self._log_network(state, cursor, ev, aux.get("participation"),
+                              phase_key)
             if self.ledger is not None:
                 self.ledger.advance(ev + 1 - cursor)
             cursor = ev + 1
@@ -296,20 +297,21 @@ class Engine:
             state, _, aux = self.run_rounds(state, data, phase_key, cursor,
                                             rounds, batch_size)
             self._log_network(state, cursor, rounds - 1,
-                              aux.get("participation"))
+                              aux.get("participation"), phase_key)
             if self.ledger is not None:
                 self.ledger.advance(rounds - cursor)
         return self._finalize_state(state), history
 
     # ------------------------------------------------------------------
     def _log_network(self, state, first_round: int, last_round: int,
-                     masks=None) -> None:
+                     masks=None, phase_key=None) -> None:
         if self.network is None:
             return
         masks = None if masks is None else np.asarray(masks)
         for i, r in enumerate(range(first_round, last_round + 1)):
             mask = None if masks is None else masks[i]
-            self.strategy.log_communication(self.network, state, r, mask=mask)
+            self.strategy.log_communication(self.network, state, r, mask=mask,
+                                            phase_key=phase_key)
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,12 @@ class Strategy:
     # computation (e.g. P4Strategy.set_groups) MUST bump this counter.
     # (σ is exempt: it flows through the chunk as a runtime argument.)
     cache_token = 0
+    # communication topology (repro.topology): None = the strategy's built-in
+    # pattern (DP-DSGT's ring, P4's group mean). Subclasses that shadow this
+    # with a dataclass field get it hashed into the default fingerprint
+    # automatically (Topology is hashable by value).
+    topology = None
+    _mix_plan = None
 
     # ------------------------------------------------------------ chunk cache
     def fingerprint(self) -> Tuple:
@@ -158,6 +164,12 @@ class Strategy:
         (safe: no cross-instance reuse). Override to enable value-based
         reuse for composite fields (see P4Strategy)."""
         vals = [type(self).__name__, self.cache_token]
+        # the configured topology changes the traced mixing step even when it
+        # is not a dataclass field (set via set_topology); include it so two
+        # same-token instances with different graphs can never share a chunk
+        field_names = {f.name for f in dataclasses.fields(self)}
+        if "topology" not in field_names and self.topology is not None:
+            vals.append(self.topology.fingerprint())
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
             if f.name == "sigma":
@@ -208,6 +220,38 @@ class Strategy:
         """Communication/aggregation step after local updates (identity by
         default — e.g. the local-training baseline never communicates)."""
         return state
+
+    # ------------------------------------------------------------- topology
+    def set_topology(self, topology) -> None:
+        """Install a communication graph (``repro.topology``): the mixing
+        plan is compiled once host-side and the traced ``mix``/``mix_sharded``
+        hooks below apply it per round. Changes the traced computation, so
+        compiled chunks are invalidated; ``None`` restores the strategy's
+        built-in pattern."""
+        from repro.topology.mixing import make_plan
+        self.topology = topology
+        self._mix_plan = None if topology is None else make_plan(topology)
+        self.cache_token += 1
+
+    def mix(self, stacked_tree, r, key):
+        """One gossip round over the configured topology: t ← W_r t on every
+        client-stacked leaf, with the round's link faults drawn in-jit from
+        ``key``'s fault stream. Identity when no topology is configured —
+        strategies call this unconditionally and topology-free runs trace
+        nothing extra."""
+        if self._mix_plan is None:
+            return stacked_tree
+        from repro.topology.mixing import mix_stacked
+        return mix_stacked(stacked_tree, self._mix_plan, r, key)
+
+    def mix_sharded(self, stacked_tree, r, key, ctx):
+        """Sharded twin of ``mix`` (inside the shard_map region): ppermute
+        halo exchange for the shard-aligned ring, slice-local gathers when
+        every edge is shard-resident, gather→mix→re-shard otherwise."""
+        if self._mix_plan is None:
+            return stacked_tree
+        from repro.topology.mixing import mix_stacked_sharded
+        return mix_stacked_sharded(stacked_tree, self._mix_plan, r, key, ctx)
 
     # ------------------------------------------------------- sharded engine
     # These hooks run inside a shard_map region over the client mesh axis
@@ -305,11 +349,16 @@ class Strategy:
             params, test_x, test_y)
 
     # ------------------------------------------------------- optional hooks
-    def log_communication(self, net, state, r: int, mask=None) -> None:
+    def log_communication(self, net, state, r: int, mask=None,
+                          phase_key=None) -> None:
         """Record the round's messages on a P2PNetwork (host-side, called by
         the engine at eval boundaries for each elapsed round). ``mask`` is the
         round's (M,) participation mask under a sampling schedule (None for
-        full participation) — absent clients must contribute zero bytes."""
+        full participation) — absent clients must contribute zero bytes.
+        ``phase_key`` is the engine's phase key: strategies with a faulty
+        topology re-derive the round's exact link-fault realization from it
+        (``repro.topology.faults.host_fault_masks``) so dropped links also
+        contribute zero bytes."""
 
     def set_sigma(self, sigma: float) -> None:
         """Engine hook for target-ε calibration (``Engine.fit(target_epsilon=

@@ -8,7 +8,12 @@ JSONL results consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
 sampling rates on the federation engine. The reported budget per point is
 read back from ``History.metrics["dp_epsilon"]`` (the engine's PrivacyLedger
 record) rather than re-derived from the config, so the sweep output and the
-training record cannot disagree."""
+training record cannot disagree.
+
+``--topology`` — the graph sweep: DP-DSGT across topology families × link
+drop rates. Each record carries the graph's spectral gap and the measured
+per-round byte/message load, so accuracy-vs-spectral-gap and
+accuracy-vs-drop-rate curves come straight out of the JSONL."""
 from __future__ import annotations
 
 import argparse
@@ -99,6 +104,77 @@ def privacy_sweep(args) -> None:
                       flush=True)
 
 
+def topology_sweep(args) -> None:
+    """DP-DSGT (topology family × drop rate) grid on the federation engine.
+
+    Per point: the configured graph's spectral gap (the mixing-rate axis the
+    accuracy curves are plotted against), final accuracy, and the per-round
+    gossip byte/message/link load measured on a ``P2PNetwork`` — including
+    the relay-free per-link maximum, the load-balance number a real
+    deployment cares about. ``--sharded`` runs each point on the
+    ShardedEngine over a client mesh of every available device."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    from repro.config import TopologyConfig
+    from repro.core.p2p import P2PNetwork
+    from repro.engine import Engine, FederatedData, ShardedEngine
+    from repro.topology import make_topology, per_link_summary
+
+    mesh = None
+    if args.sharded:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(args.mesh_clients or None)
+
+    rng = np.random.default_rng(args.seed)
+    M, R, feat, classes = 16, 96, 64, 10
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, R))
+    xs = protos[ys] + rng.normal(size=(M, R, feat)).astype(np.float32) * 0.4
+    X, Y = xs, ys.astype(np.int32)
+    data = FederatedData(X, Y, jnp.asarray(X), jnp.asarray(Y))
+    rounds, batch = args.rounds, 24
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for fam in args.families:
+            base = make_topology(TopologyConfig(family=fam, k=args.degree,
+                                                seed=args.seed), M)
+            for drop in args.drop_rates:
+                topo = base.with_faults(drop_prob=drop) if drop > 0 else base
+                strat = DPDSGTStrategy(feat_dim=feat, num_classes=classes,
+                                       lr=0.3, sigma=args.sigma,
+                                       topology=topo)
+                net = P2PNetwork(M)
+                eng = (ShardedEngine(strat, eval_every=max(rounds - 1, 1),
+                                     network=net, mesh=mesh) if mesh is not None
+                       else Engine(strat, eval_every=max(rounds - 1, 1),
+                                   network=net))
+                t0 = time.time()
+                _, hist = eng.fit(data, rounds=rounds,
+                                  key=jax.random.PRNGKey(args.seed),
+                                  batch_size=batch)
+                links = per_link_summary(net)
+                rec = {"mode": "topology", "family": fam,
+                       "topology": topo.describe(),
+                       "drop_prob": float(drop),
+                       "spectral_gap": topo.describe()["spectral_gap"],
+                       "accuracy": round(hist[-1][1], 4),
+                       "rounds": rounds,
+                       "messages_per_round": round(net.num_messages() / rounds, 2),
+                       "bytes_per_round": round(net.total_bytes() / rounds, 1),
+                       **links,
+                       "seconds": round(time.time() - t0, 1),
+                       "sharded": bool(mesh is not None)}
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                print(f"{fam} drop={drop}: gap={rec['spectral_gap']} "
+                      f"acc={rec['accuracy']} "
+                      f"bytes/round={rec['bytes_per_round']}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="results/dryrun_sweep.jsonl")
@@ -118,16 +194,33 @@ def main():
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sharded", action="store_true",
-                    help="--privacy: run points on the ShardedEngine over a "
-                         "client mesh of every device")
+                    help="--privacy/--topology: run points on the "
+                         "ShardedEngine over a client mesh of every device")
     ap.add_argument("--mesh-clients", type=int, default=0,
-                    help="--privacy --sharded: client-mesh size (0 = all)")
+                    help="--privacy/--topology --sharded: client-mesh size "
+                         "(0 = all)")
+    ap.add_argument("--topology", action="store_true",
+                    help="run the DP-DSGT topology-family x drop-rate sweep")
+    ap.add_argument("--families", nargs="*",
+                    default=["ring", "kregular", "exponential", "smallworld",
+                             "full"])
+    ap.add_argument("--drop-rates", nargs="*", type=float,
+                    default=[0.0, 0.1, 0.3])
+    ap.add_argument("--degree", type=int, default=4,
+                    help="--topology: degree for kregular/smallworld")
+    ap.add_argument("--sigma", type=float, default=0.3,
+                    help="--topology: DP noise multiplier")
     args = ap.parse_args()
 
     if args.privacy:
         if args.out == "results/dryrun_sweep.jsonl":
             args.out = "results/privacy_sweep.jsonl"
         privacy_sweep(args)
+        return
+    if args.topology:
+        if args.out == "results/dryrun_sweep.jsonl":
+            args.out = "results/topology_sweep.jsonl"
+        topology_sweep(args)
         return
 
     done = set()

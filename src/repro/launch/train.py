@@ -49,6 +49,15 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--p4", action="store_true")
     ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--topology", default="none",
+                    help="--p4: inter-group proxy gossip graph over the G "
+                         "groups (ring | full | kregular | exponential | "
+                         "erdos | smallworld | gossip); 'none' keeps groups "
+                         "isolated as in the paper")
+    ap.add_argument("--gossip-every", type=int, default=10,
+                    help="--p4 --topology: proxy gossip cadence in steps")
+    ap.add_argument("--drop-prob", type=float, default=0.0,
+                    help="--p4 --topology: per-gossip link-drop probability")
     ap.add_argument("--epsilon", type=float, default=15.0)
     ap.add_argument("--target-epsilon", type=float, default=None,
                     help="RDP-calibrate the proxy noise to this budget "
@@ -135,6 +144,22 @@ def main():
             return jax.tree_util.tree_map(
                 lambda t: jnp.broadcast_to(t[None], (G,) + t.shape), batch)
 
+        # inter-group proxy gossip at LM scale: the G group models become
+        # nodes of a communication graph and their proxies mix every
+        # --gossip-every steps — co-train rounds route over the configured
+        # topology instead of groups staying mutually isolated
+        gossip_fn = None
+        if args.topology != "none" and G > 1:
+            from repro.config import TopologyConfig
+            from repro.topology import make_plan, make_topology, mix_stacked
+            topo = make_topology(
+                TopologyConfig(family=args.topology, k=min(4, G - 1),
+                               drop_prob=args.drop_prob), G)
+            plan = make_plan(topo)
+            print(f"inter-group topology: {topo.describe()}")
+            gossip_fn = jax.jit(
+                lambda p, r, k: mix_stacked(p, plan, r, k))
+
         chunk = max(1, min(args.log_every, args.steps))
         scans = {chunk: make_scan_steps(step, device_batch, chunk)}
         i = 0
@@ -144,6 +169,14 @@ def main():
                 scans[length] = make_scan_steps(step, device_batch, length)
             t0 = time.time()
             params, opt_states, losses = scans[length](params, opt_states, key, i)
+            if gossip_fn is not None:
+                # fire once per crossed gossip boundary — exact divisibility
+                # would silently skip cadences that don't align with the
+                # chunking (--log-every)
+                g = max(1, args.gossip_every)
+                for r in range(i // g + 1, (i + length) // g + 1):
+                    params["proxy"] = gossip_fn(
+                        params["proxy"], r, jax.random.fold_in(key, 0x7090 + r))
             ledger.advance(length)
             eps, delta = ledger.spend()
             print(f"step {i:4d} loss={float(losses[0]):.4f} "

@@ -1,0 +1,26 @@
+"""Topology subsystem: communication graphs, mixing matrices, and
+fault-injected gossip for the P2P layer (README §Topologies).
+
+``graphs`` builds the graph families (ring / torus / k-regular expander /
+exponential / Erdős–Rényi / small-world / group-clustered / randomized
+gossip sequences), ``mixing`` constructs doubly-stochastic mixing matrices
+(Metropolis–Hastings or the lazy uniform rule) and compiles them into the
+in-jit sparse mixing step every P2P strategy shares, ``faults`` draws
+per-round link-drop / node-churn realizations inside the scanned round
+body, and ``accounting`` extends ``core.p2p.P2PNetwork`` with per-link
+byte/hop ledgers and shortest-path relay routing.
+"""
+from repro.topology.accounting import (log_gossip_round, per_link_summary,
+                                       route, send_routed, shortest_hops)
+from repro.topology.faults import (FAULT_STREAM, draw_fault_masks, fault_key,
+                                   host_fault_masks)
+from repro.topology.graphs import (TimeVaryingTopology, Topology,
+                                   erdos_renyi, exponential, fully_connected,
+                                   gossip_matchings, group_clustered,
+                                   k_regular, make_topology, ring,
+                                   small_world, torus)
+from repro.topology.mixing import (MixPlan, edges_shard_resident,
+                                   is_connected, is_doubly_stochastic,
+                                   make_plan, metropolis_weights, mix_stacked,
+                                   mix_stacked_sharded, spectral_gap,
+                                   uniform_weights)

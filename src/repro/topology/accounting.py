@@ -1,0 +1,107 @@
+"""Per-link byte/hop accounting over a communication graph.
+
+Extends ``repro.core.p2p.P2PNetwork``'s flat message log with topology
+awareness: messages between non-adjacent nodes are relayed along shortest
+paths, every physical link traversal is logged as its own ``Message`` (with
+its hop position), and gossip rounds log one payload per alive directed
+edge. Everything here is host-side — it runs at the engine's eval
+boundaries, mirroring exactly the cohorts/faults the traced rounds realized
+(``repro.topology.faults.host_fault_masks``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def shortest_hops(adjacency: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """All-pairs BFS. Returns ``(dist, next_hop)``: dist[i, j] = hop count
+    (-1 if unreachable), next_hop[i, j] = the neighbor of i on one shortest
+    i→j path (i itself when j == i or unreachable)."""
+    adj = np.asarray(adjacency, bool)
+    M = adj.shape[0]
+    dist = np.full((M, M), -1, np.int32)
+    next_hop = np.tile(np.arange(M, dtype=np.int32)[:, None], (1, M))
+    for s in range(M):
+        dist[s, s] = 0
+        frontier = [s]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in np.nonzero(adj[u])[0]:
+                    if dist[s, v] < 0:
+                        dist[s, v] = dist[s, u] + 1
+                        # first hop out of s toward v: inherit u's, unless u
+                        # IS s (then the first hop is v itself)
+                        next_hop[s, v] = v if u == s else next_hop[s, u]
+                        nxt.append(int(v))
+            frontier = nxt
+    return dist, next_hop
+
+
+def route(next_hop: np.ndarray, dist: np.ndarray, src: int,
+          dst: int) -> List[Tuple[int, int]]:
+    """The link sequence of one shortest src→dst path; a single direct
+    (src, dst) link when dst is unreachable (accounting degrades to the
+    topology-free behavior rather than dropping the message)."""
+    if src == dst:
+        return []
+    if dist[src, dst] < 0:
+        return [(src, dst)]
+    path, u = [], src
+    while u != dst:
+        v = int(next_hop[u, dst])
+        path.append((u, v))
+        u = v
+    return path
+
+
+def send_routed(net, src: int, dst: int, payload, kind: str, rnd: int,
+                dist: Optional[np.ndarray],
+                next_hop: Optional[np.ndarray]) -> int:
+    """Log one logical message as its physical link traversals. Without a
+    routing table this is exactly ``net.send`` (one direct message)."""
+    if next_hop is None:
+        return net.send(src, dst, payload, kind, rnd=rnd)
+    total = 0
+    for hop, (u, v) in enumerate(route(next_hop, dist, src, dst)):
+        total += net.send(u, v, payload, kind, rnd=rnd, hop=hop)
+    return total
+
+
+def log_gossip_round(net, topology, stacked_params, rnd: int,
+                     mask=None, keep: Optional[np.ndarray] = None,
+                     kind: str = "gossip") -> int:
+    """One gossip round's messages: every alive directed edge (i → j)
+    carries i's own parameter slice. ``mask`` is the round's participation
+    cohort (absent endpoints exchange nothing — matching the schedule's
+    freeze semantics), ``keep`` the realized fault matrix from
+    ``host_fault_masks`` (dropped links carry nothing). Returns total bytes.
+    """
+    import jax
+    topo = topology
+    if hasattr(topo, "topologies"):          # time-varying: the round's slice
+        topo = topo.topologies[rnd % len(topo.topologies)]
+    total = 0
+    for i, j in topo.edges():
+        if mask is not None and (mask[i] <= 0 or mask[j] <= 0):
+            continue
+        if keep is not None and keep[i, j] <= 0:
+            continue
+        own = jax.tree_util.tree_map(lambda t: t[i], stacked_params)
+        total += net.send(i, j, own, kind, rnd=rnd)
+    return total
+
+
+def per_link_summary(net, kind: Optional[str] = None) -> Dict[str, float]:
+    """Aggregate the per-link ledger into sweep-record scalars."""
+    links = net.per_link(kind)
+    if not links:
+        return {"links_used": 0, "bytes_total": 0, "bytes_per_link_max": 0,
+                "hops_total": 0}
+    byte_counts = list(links.values())
+    return {"links_used": len(links),
+            "bytes_total": int(sum(byte_counts)),
+            "bytes_per_link_max": int(max(byte_counts)),
+            "hops_total": net.total_hops(kind)}

@@ -1,0 +1,73 @@
+"""Link-level fault injection, drawn in-jit like ``ClientSampling`` cohorts.
+
+Per round, the gossip step draws
+
+  * an (M, M) symmetric link-keep matrix — each undirected edge fails
+    independently with ``drop_prob`` (one draw per edge, mirrored across the
+    diagonal so (i→j) and (j→i) fail together: a dead link is dead in both
+    directions);
+  * an (M,) node-up mask — each node is offline with ``churn_prob``; an
+    offline node's links all drop, so it neither sends nor receives and its
+    mixing row degenerates to the identity.
+
+The effective keep matrix multiplies the link draw by both endpoints' up
+bits, staying symmetric; the mixing step moves every dropped slot's weight
+onto the diagonal, so each realized matrix remains doubly stochastic — a
+faulty gossip round still preserves the global mean (tested in the
+``tests/test_topology.py`` property tier).
+
+The draws key off ``fold_in(key, FAULT_STREAM)`` of the round's local-update
+key, a stream nothing else consumes — fault-free runs are bit-identical to
+history, and host-side byte accounting (``Strategy.log_communication``)
+re-derives the exact realization from the engine's phase key. The same
+function serves both: it is ordinary jax, eager on the host and traced in
+the chunk.
+"""
+from __future__ import annotations
+
+FAULT_STREAM = 0x70
+
+
+def fault_key(key):
+    """The per-round fault stream (disjoint from the batch/local/aggregate/
+    cohort streams 0–3 and from the per-client key split)."""
+    import jax
+    return jax.random.fold_in(key, FAULT_STREAM)
+
+
+def draw_fault_masks(key, M: int, drop_prob: float, churn_prob: float):
+    """Returns ``(keep, up)``: the (M, M) float32 effective edge-keep matrix
+    (symmetric; both-endpoints-up already folded in; diagonal 1 when both up)
+    and the (M,) float32 node-up mask. Static zero rates skip their draw so
+    the fault-free trace contains no PRNG ops at all."""
+    import jax
+    import jax.numpy as jnp
+    kd, kc = jax.random.split(fault_key(key))
+    if drop_prob > 0.0:
+        u = jax.random.uniform(kd, (M, M))
+        tri = jnp.triu(u, 1)
+        u_sym = tri + tri.T              # one draw per undirected edge
+        keep = (u_sym >= drop_prob).astype(jnp.float32)
+        keep = jnp.where(jnp.eye(M, dtype=bool), 1.0, keep)
+    else:
+        keep = jnp.ones((M, M), jnp.float32)
+    if churn_prob > 0.0:
+        up = (jax.random.uniform(kc, (M,)) >= churn_prob).astype(jnp.float32)
+    else:
+        up = jnp.ones((M,), jnp.float32)
+    keep = keep * up[:, None] * up[None, :]
+    return keep, up
+
+
+def host_fault_masks(phase_key, r: int, stream: int, M: int,
+                     drop_prob: float, churn_prob: float):
+    """Host-side twin for byte accounting: re-derive the exact keep/up
+    realization the traced round used, from the engine's phase key and the
+    stream the consuming hook draws on (1 = local_update for gossip mixes,
+    2 = aggregate for P4's group faults)."""
+    import jax
+    import numpy as np
+    rk = jax.random.fold_in(phase_key, r)
+    keep, up = draw_fault_masks(jax.random.fold_in(rk, stream), M,
+                                drop_prob, churn_prob)
+    return np.asarray(keep), np.asarray(up)

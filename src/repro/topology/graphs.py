@@ -1,0 +1,413 @@
+"""Communication graphs for the P2P layer.
+
+The paper's evaluation only ever exercises two implicit topologies — the
+hardcoded ring inside DP-DSGT and the all-to-all inside a P4 group — yet the
+collaboration graph is a first-class object in decentralized learning
+(Bellet et al. 2018; MAPL 2024): its spectral gap bounds gossip mixing time
+and therefore how fast personalization information propagates. This module
+makes the graph explicit: a ``Topology`` is a symmetric adjacency plus a
+doubly-stochastic mixing matrix W, hashable BY VALUE so it can key the
+engine's compiled-chunk cache, with optional link-drop / node-churn fault
+rates that the mixing step draws in-jit each round (``repro.topology.faults``).
+
+Time-varying randomized gossip (pairwise averaging over a fresh random
+matching each round) is a ``TimeVaryingTopology``: a periodic sequence of
+static topologies the mixing plan indexes with ``r % period`` inside the
+scanned round body.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.topology.mixing import (is_connected, metropolis_weights,
+                                   spectral_gap, uniform_weights)
+
+
+@dataclass(eq=False)
+class Topology:
+    """A static communication graph + its mixing matrix.
+
+    ``adjacency``: (M, M) bool, symmetric, zero diagonal.
+    ``weights``:   (M, M) float64 doubly-stochastic symmetric W (diagonal
+                   included) — the matrix gossip applies each round.
+    ``drop_prob``: per-round probability an (undirected) link fails.
+    ``churn_prob``: per-round probability a node is offline.
+
+    Hashable by value (name, M, W bytes, fault rates) so strategies can put
+    a topology in their chunk-cache fingerprint: equal topologies share
+    compiled chunks, different ones can never collide.
+    """
+
+    name: str
+    adjacency: np.ndarray
+    weights: np.ndarray
+    drop_prob: float = 0.0
+    churn_prob: float = 0.0
+
+    def __post_init__(self):
+        adj = np.asarray(self.adjacency, bool)
+        w = np.asarray(self.weights, np.float64)
+        if adj.shape != w.shape or adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+            raise ValueError(f"adjacency/weights shape mismatch: "
+                             f"{adj.shape} vs {w.shape}")
+        if not np.array_equal(adj, adj.T):
+            raise ValueError("adjacency must be symmetric")
+        if np.any(np.diag(adj)):
+            raise ValueError("adjacency must have a zero diagonal")
+        self.adjacency = adj
+        self.weights = w
+
+    # ------------------------------------------------------------ properties
+    @property
+    def M(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1).astype(np.int64)
+
+    @property
+    def num_edges(self) -> int:
+        """Undirected edge count."""
+        return int(self.adjacency.sum()) // 2
+
+    def edges(self) -> List[Tuple[int, int]]:
+        """Directed edge list (both orientations) — the per-round message
+        pattern one gossip exchange induces."""
+        src, dst = np.nonzero(self.adjacency)
+        return list(zip(src.tolist(), dst.tolist()))
+
+    def is_connected(self) -> bool:
+        return is_connected(self.adjacency)
+
+    def spectral_gap(self) -> float:
+        """1 − |λ₂(W)| — the gossip convergence rate (larger = faster)."""
+        return spectral_gap(self.weights)
+
+    def with_faults(self, drop_prob: float = 0.0,
+                    churn_prob: float = 0.0) -> "Topology":
+        return replace(self, drop_prob=float(drop_prob),
+                       churn_prob=float(churn_prob))
+
+    def describe(self) -> dict:
+        """Host-side summary for sweep records / benchmark JSON."""
+        return {"name": self.name, "clients": self.M,
+                "edges": self.num_edges,
+                "mean_degree": float(np.mean(self.degrees)) if self.M else 0.0,
+                "spectral_gap": round(self.spectral_gap(), 6),
+                "connected": self.is_connected(),
+                "drop_prob": self.drop_prob, "churn_prob": self.churn_prob}
+
+    # --------------------------------------------------------- value hashing
+    def fingerprint(self) -> Tuple:
+        return ("topology", self.name, self.M, self.weights.tobytes(),
+                self.drop_prob, self.churn_prob)
+
+    def __hash__(self):
+        return hash(self.fingerprint())
+
+    def __eq__(self, other):
+        return (isinstance(other, Topology)
+                and other.fingerprint() == self.fingerprint())
+
+
+@dataclass(eq=False)
+class TimeVaryingTopology:
+    """A periodic sequence of static topologies: round r mixes over
+    ``topologies[r % period]`` (randomized-gossip matchings, alternating
+    graph colorings, ...). Fault rates apply uniformly per round."""
+
+    name: str
+    topologies: Sequence[Topology] = field(default_factory=list)
+    drop_prob: float = 0.0
+    churn_prob: float = 0.0
+
+    def __post_init__(self):
+        if not self.topologies:
+            raise ValueError("TimeVaryingTopology needs >= 1 topologies")
+        Ms = {t.M for t in self.topologies}
+        if len(Ms) != 1:
+            raise ValueError(f"member topologies disagree on M: {sorted(Ms)}")
+
+    @property
+    def M(self) -> int:
+        return self.topologies[0].M
+
+    @property
+    def period(self) -> int:
+        return len(self.topologies)
+
+    def union_adjacency(self) -> np.ndarray:
+        out = np.zeros((self.M, self.M), bool)
+        for t in self.topologies:
+            out |= t.adjacency
+        return out
+
+    def is_connected(self) -> bool:
+        """Connectivity of the union graph — what gossip needs over a full
+        period for information to reach everyone."""
+        return is_connected(self.union_adjacency())
+
+    def spectral_gap(self) -> float:
+        """Gap of the period-averaged mixing matrix (the expected one-round
+        contraction of the randomized sequence)."""
+        return spectral_gap(
+            np.mean([t.weights for t in self.topologies], axis=0))
+
+    def with_faults(self, drop_prob: float = 0.0,
+                    churn_prob: float = 0.0) -> "TimeVaryingTopology":
+        return replace(self, drop_prob=float(drop_prob),
+                       churn_prob=float(churn_prob))
+
+    def describe(self) -> dict:
+        return {"name": self.name, "clients": self.M, "period": self.period,
+                "edges": int(self.union_adjacency().sum()) // 2,
+                "spectral_gap": round(self.spectral_gap(), 6),
+                "connected": self.is_connected(),
+                "drop_prob": self.drop_prob, "churn_prob": self.churn_prob}
+
+    def fingerprint(self) -> Tuple:
+        return (("time-varying", self.name, self.drop_prob, self.churn_prob)
+                + tuple(t.fingerprint() for t in self.topologies))
+
+    def __hash__(self):
+        return hash(self.fingerprint())
+
+    def __eq__(self, other):
+        return (isinstance(other, TimeVaryingTopology)
+                and other.fingerprint() == self.fingerprint())
+
+
+# ---------------------------------------------------------------------------
+# Builders. Every builder returns a symmetric, (where possible) connected
+# graph with a doubly-stochastic W: ``weighting="uniform"`` uses the lazy
+# self-weight rule (regular graphs only — the DP-DSGT ring's historical
+# 1/2–1/4–1/4 row is self_weight=0.5), ``weighting="metropolis"`` works on
+# any graph.
+# ---------------------------------------------------------------------------
+
+
+def _weights_for(adj: np.ndarray, weighting: str, self_weight: float):
+    if weighting == "uniform":
+        return uniform_weights(adj, self_weight)
+    if weighting == "metropolis":
+        return metropolis_weights(adj)
+    raise ValueError(f"unknown weighting {weighting!r}; "
+                     "expected uniform | metropolis")
+
+
+def _adj_from_offsets(M: int, offsets: Sequence[int]) -> np.ndarray:
+    """Circulant adjacency: i ~ (i ± o) mod M for each offset."""
+    adj = np.zeros((M, M), bool)
+    idx = np.arange(M)
+    for o in offsets:
+        o = int(o) % M
+        if o == 0:
+            continue
+        adj[idx, (idx + o) % M] = True
+        adj[(idx + o) % M, idx] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def ring(M: int, self_weight: float = 0.5, *,
+         weighting: str = "uniform") -> Topology:
+    """The cycle graph — DP-DSGT's historical topology. The default
+    ``self_weight=0.5`` uniform weighting reproduces the pre-refactor
+    ``_ring_mix`` row (1/2 self, 1/4 per neighbor) exactly."""
+    adj = _adj_from_offsets(M, [1]) if M > 1 else np.zeros((M, M), bool)
+    return Topology(f"ring{M}", adj, _weights_for(adj, weighting, self_weight))
+
+
+def fully_connected(M: int, *, weighting: str = "metropolis",
+                    self_weight: float = 0.5) -> Topology:
+    adj = ~np.eye(M, dtype=bool) if M > 1 else np.zeros((M, M), bool)
+    return Topology(f"full{M}", adj, _weights_for(adj, weighting, self_weight))
+
+
+def torus(rows: int, cols: Optional[int] = None, *,
+          weighting: str = "metropolis", self_weight: float = 0.5) -> Topology:
+    """2-D wraparound grid (4-regular when both dims > 2)."""
+    cols = cols if cols is not None else rows
+    M = rows * cols
+    adj = np.zeros((M, M), bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for rr, cc in ((r, (c + 1) % cols), ((r + 1) % rows, c)):
+                j = rr * cols + cc
+                if i != j:
+                    adj[i, j] = adj[j, i] = True
+    return Topology(f"torus{rows}x{cols}", adj,
+                    _weights_for(adj, weighting, self_weight))
+
+
+def k_regular(M: int, k: int = 4, *, weighting: str = "metropolis",
+              self_weight: float = 0.5) -> Topology:
+    """Circulant k-regular graph with maximally spread offsets — the
+    deterministic expander family (offsets ~ j·M/(k+1) instead of the
+    nearest-neighbor lattice, so the diameter shrinks like M/k and the
+    spectral gap grows with k)."""
+    if k >= M:
+        return fully_connected(M, weighting=weighting, self_weight=self_weight)
+    # each offset in [1, (M-1)//2] contributes 2 to the degree, the antipodal
+    # M/2 (even M) exactly 1; offset 1 anchors connectivity (gcd 1 with M)
+    # and the rest spread across the half-circle for expansion
+    n_off = max(1, k // 2)
+    half = max(1, (M - 1) // 2)
+    offsets, seen = [1], {1}
+    for j in range(1, n_off):
+        o = max(2, min(half, round(1 + j * (half - 1) / max(n_off - 1, 1))))
+        while o in seen and o < half:
+            o += 1
+        seen.add(o)
+        offsets.append(o)
+    if k % 2 == 1 and M % 2 == 0 and M // 2 not in seen:
+        offsets.append(M // 2)   # odd degree: the antipodal matching
+    adj = _adj_from_offsets(M, offsets)
+    return Topology(f"kreg{M}_{k}", adj,
+                    _weights_for(adj, weighting, self_weight))
+
+
+def exponential(M: int, *, weighting: str = "metropolis",
+                self_weight: float = 0.5) -> Topology:
+    """Symmetrized exponential graph (offsets 1, 2, 4, ... — ProxyFL's
+    directed schedule as a static undirected topology): O(log M) degree,
+    near-constant spectral gap."""
+    offsets, o = [], 1
+    while o <= M // 2:
+        offsets.append(o)
+        o *= 2
+    adj = _adj_from_offsets(M, offsets or [1])
+    return Topology(f"exp{M}", adj, _weights_for(adj, weighting, self_weight))
+
+
+def erdos_renyi(M: int, p: float = 0.3, seed: int = 0, *,
+                weighting: str = "metropolis", self_weight: float = 0.5,
+                ensure_connected: bool = True) -> Topology:
+    """G(M, p); with ``ensure_connected`` the draw is retried on a shifted
+    seed and finally unioned with a ring (the standard connectivity patch)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(64):
+        u = rng.random((M, M))
+        adj = np.triu(u < p, 1)
+        adj = adj | adj.T
+        if not ensure_connected or is_connected(adj):
+            break
+    else:
+        adj = adj | _adj_from_offsets(M, [1])
+    return Topology(f"er{M}_p{p:g}", adj,
+                    _weights_for(adj, weighting, self_weight))
+
+
+def small_world(M: int, k: int = 4, rewire_prob: float = 0.2, seed: int = 0, *,
+                weighting: str = "metropolis", self_weight: float = 0.5,
+                ensure_connected: bool = True) -> Topology:
+    """Watts–Strogatz: ring lattice with k/2 neighbors per side, each edge
+    rewired with probability ``rewire_prob`` (kept symmetric)."""
+    rng = np.random.default_rng(seed)
+    adj = _adj_from_offsets(M, range(1, max(1, k // 2) + 1))
+    src, dst = np.nonzero(np.triu(adj, 1))
+    for i, j in zip(src.tolist(), dst.tolist()):
+        if rng.random() >= rewire_prob:
+            continue
+        candidates = [c for c in range(M)
+                      if c != i and not adj[i, c]]
+        if not candidates:
+            continue
+        new = int(rng.choice(candidates))
+        adj[i, j] = adj[j, i] = False
+        adj[i, new] = adj[new, i] = True
+    if ensure_connected and not is_connected(adj):
+        adj = adj | _adj_from_offsets(M, [1])
+    return Topology(f"sw{M}_k{k}_p{rewire_prob:g}", adj,
+                    _weights_for(adj, weighting, self_weight))
+
+
+def group_clustered(groups: Sequence[Sequence[int]], M: Optional[int] = None,
+                    *, bridge: bool = True, weighting: str = "metropolis",
+                    self_weight: float = 0.5) -> Topology:
+    """Complete subgraph inside every group (P4's "communicate only within
+    your group" as an explicit graph); ``bridge`` adds a ring over the
+    groups' first members so the global graph stays connected (the relay
+    path inter-group messages would physically take)."""
+    M = M if M is not None else (max(max(g) for g in groups) + 1)
+    adj = np.zeros((M, M), bool)
+    for g in groups:
+        for a in g:
+            for b in g:
+                if a != b:
+                    adj[a, b] = True
+    if bridge and len(groups) > 1:
+        heads = [g[0] for g in groups]
+        for a, b in zip(heads, heads[1:] + heads[:1]):
+            if a != b:
+                adj[a, b] = adj[b, a] = True
+    return Topology(f"groups{M}x{len(groups)}", adj,
+                    _weights_for(adj, weighting, self_weight))
+
+
+def gossip_matchings(M: int, period: int = 8, seed: int = 0, *,
+                     self_weight: float = 0.5) -> TimeVaryingTopology:
+    """Randomized pairwise gossip: each round of the period is a fresh
+    random (near-)perfect matching; matched pairs average with weight
+    ``1 - self_weight`` (0.5 = classic symmetric gossip). Odd M leaves one
+    node idle per round (identity row — W stays doubly stochastic)."""
+    rng = np.random.default_rng(seed)
+    topos = []
+    for t in range(max(1, period)):
+        perm = rng.permutation(M)
+        adj = np.zeros((M, M), bool)
+        for a in range(0, M - 1, 2):
+            i, j = int(perm[a]), int(perm[a + 1])
+            adj[i, j] = adj[j, i] = True
+        topos.append(Topology(f"match{M}_{t}", adj,
+                              uniform_weights(adj, self_weight,
+                                              allow_irregular=True)))
+    return TimeVaryingTopology(f"gossip{M}_T{period}", topos)
+
+
+# ---------------------------------------------------------------------------
+# Config factory
+# ---------------------------------------------------------------------------
+
+def make_topology(cfg, M: int, groups=None):
+    """Build the configured topology for M clients (``repro.config.
+    TopologyConfig``). ``family="none"`` returns None — each strategy keeps
+    its built-in pattern (DP-DSGT's ring, P4's group mean)."""
+    fam = cfg.family
+    if fam in ("none", None, ""):
+        return None
+    kw = dict(weighting=cfg.weighting, self_weight=cfg.self_weight)
+    if fam == "ring":
+        topo = ring(M, cfg.self_weight, weighting=cfg.weighting)
+    elif fam == "full":
+        topo = fully_connected(M, **kw)
+    elif fam == "torus":
+        rows = int(np.sqrt(M))
+        while M % rows:
+            rows -= 1
+        topo = torus(rows, M // rows, **kw)
+    elif fam == "kregular":
+        topo = k_regular(M, cfg.k, **kw)
+    elif fam == "exponential":
+        topo = exponential(M, **kw)
+    elif fam == "erdos":
+        topo = erdos_renyi(M, cfg.p, cfg.seed, **kw)
+    elif fam == "smallworld":
+        topo = small_world(M, cfg.k, cfg.p, cfg.seed, **kw)
+    elif fam == "group":
+        if groups is None:
+            raise ValueError("topology family 'group' needs formed groups")
+        topo = group_clustered(groups, M, bridge=cfg.bridge, **kw)
+    elif fam == "gossip":
+        topo = gossip_matchings(M, cfg.period, cfg.seed,
+                                self_weight=cfg.self_weight)
+    else:
+        raise ValueError(f"unknown topology family {fam!r}")
+    if cfg.drop_prob > 0 or cfg.churn_prob > 0:
+        topo = topo.with_faults(cfg.drop_prob, cfg.churn_prob)
+    return topo

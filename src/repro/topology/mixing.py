@@ -1,0 +1,364 @@
+"""Mixing matrices and the in-jit gossip step.
+
+Two layers:
+
+  * host-side construction — Metropolis–Hastings weights (doubly stochastic
+    on ANY symmetric graph), the lazy uniform rule for regular graphs (the
+    DP-DSGT ring's historical 1/2–1/4–1/4 row), spectral-gap reporting, and
+    connectivity checks;
+
+  * the traced mixing step — ``make_plan`` compiles a topology into a
+    ``MixPlan`` (padded neighbor-index/weight arrays plus special-case
+    flags) and ``mix_stacked`` applies one gossip round to a stacked
+    (M, ...) pytree inside the engine's scanned round body. The plan keeps
+    three executions of the same arithmetic:
+
+      - uniform fast path: ``s·t + w·Σ_k t[nbr_k]`` with scalar s, w —
+        for the ring this is bit-identical to the pre-refactor
+        ``_ring_mix`` expression ``0.5·t + 0.25·(left + right)``;
+      - general path: per-row self weights + per-slot neighbor weights
+        (Metropolis rows, matchings, fault-adjusted rows);
+      - sharded paths (``mix_stacked_sharded``): ppermute halo exchange
+        when the topology is the shard-aligned ring, slice-local gathers
+        when every edge is shard-resident, and the gather→mix→re-shard
+        fallback (exact for any graph) otherwise.
+
+    Link faults are drawn in-jit per round (``repro.topology.faults``) and
+    folded into the row weights with the dropped mass moved to the diagonal,
+    so every realized matrix stays doubly stochastic — gossip under faults
+    still preserves the global mean.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Host-side: weight construction + graph diagnostics (numpy only — graphs.py
+# imports these at module load, before jax is necessarily initialized)
+# ---------------------------------------------------------------------------
+
+
+def metropolis_weights(adjacency: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings: W_ij = 1 / (1 + max(d_i, d_j)) on edges,
+    diagonal absorbs the remainder. Symmetric + doubly stochastic on any
+    symmetric graph (Xiao & Boyd 2004)."""
+    adj = np.asarray(adjacency, bool)
+    deg = adj.sum(axis=1)
+    denom = 1.0 + np.maximum(deg[:, None], deg[None, :])
+    w = np.where(adj, 1.0 / denom, 0.0)
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def uniform_weights(adjacency: np.ndarray, self_weight: float = 0.5, *,
+                    allow_irregular: bool = False) -> np.ndarray:
+    """Lazy uniform rule: diagonal ``s``, each edge ``(1−s)/d``. Requires a
+    regular graph (that is what makes it doubly stochastic); with
+    ``allow_irregular`` the edge weight becomes ``(1−s)/max(d_i, d_j)`` and
+    the diagonal absorbs the remainder (used for matchings, where degrees
+    are 0/1 and the two rules coincide)."""
+    adj = np.asarray(adjacency, bool)
+    deg = adj.sum(axis=1)
+    s = float(self_weight)
+    if not 0.0 <= s <= 1.0:
+        raise ValueError(f"self_weight must be in [0, 1], got {s}")
+    pos = deg[deg > 0]
+    if pos.size == 0:
+        return np.eye(adj.shape[0])
+    if not allow_irregular and not np.all(pos == pos[0]):
+        raise ValueError(
+            "uniform weighting needs a regular graph; use "
+            "weighting='metropolis' (or allow_irregular for matchings)")
+    denom = np.maximum(np.maximum(deg[:, None], deg[None, :]), 1)
+    w = np.where(adj, (1.0 - s) / denom, 0.0)
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:
+    w = np.asarray(w, np.float64)
+    return (np.all(w >= -tol)
+            and np.allclose(w.sum(axis=0), 1.0, atol=1e-8)
+            and np.allclose(w.sum(axis=1), 1.0, atol=1e-8))
+
+
+def is_connected(adjacency: np.ndarray) -> bool:
+    """BFS from node 0 (single-node graphs count as connected)."""
+    adj = np.asarray(adjacency, bool)
+    M = adj.shape[0]
+    if M <= 1:
+        return True
+    seen = np.zeros(M, bool)
+    seen[0] = True
+    frontier = [0]
+    while frontier:
+        nxt = adj[frontier].any(axis=0) & ~seen
+        frontier = np.nonzero(nxt)[0].tolist()
+        seen |= nxt
+    return bool(seen.all())
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 − |λ₂| of a symmetric mixing matrix: the per-round contraction of
+    the consensus error, the quantity accuracy-vs-topology sweeps plot."""
+    w = np.asarray(w, np.float64)
+    if w.shape[0] <= 1:
+        return 1.0
+    lam = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
+    return float(1.0 - lam[1])
+
+
+# ---------------------------------------------------------------------------
+# The traced mixing step
+# ---------------------------------------------------------------------------
+
+
+@dataclass(eq=False)
+class MixPlan:
+    """A topology compiled for the scanned round body: numpy neighbor
+    index/weight stacks (baked into the trace as constants) + the
+    special-case flags the apply functions branch on at trace time."""
+
+    topology: object              # the Topology / TimeVaryingTopology source
+    M: int
+    degree: int                   # max slots per row (padded with self-loops)
+    period: int                   # 1 for static topologies
+    nbr_np: np.ndarray            # (T, M, d) int32
+    nbr_w_np: np.ndarray          # (T, M, d) float32, 0 on padding
+    self_w_np: np.ndarray         # (T, M) float32
+    uniform: Optional[Tuple[float, float]]   # (self_w, nbr_w) scalars
+    ring: bool                    # shard-aligned halo exchange eligible
+    drop_prob: float
+    churn_prob: float
+
+    @property
+    def faulty(self) -> bool:
+        return self.drop_prob > 0.0 or self.churn_prob > 0.0
+
+
+def make_plan(topology) -> MixPlan:
+    """Compile a (possibly time-varying) topology into a MixPlan."""
+    topos = getattr(topology, "topologies", None) or [topology]
+    M = topos[0].M
+    d = max((int(t.degrees.max()) if t.M and t.num_edges else 0)
+            for t in topos)
+    T = len(topos)
+    nbr = np.tile(np.arange(M, dtype=np.int32)[None, :, None], (T, 1, max(d, 1)))
+    nbr_w = np.zeros((T, M, max(d, 1)), np.float32)
+    self_w = np.ones((T, M), np.float32)
+    for t, topo in enumerate(topos):
+        w = topo.weights
+        for i in range(M):
+            js = np.nonzero(topo.adjacency[i])[0]
+            nbr[t, i, : len(js)] = js
+            nbr_w[t, i, : len(js)] = w[i, js].astype(np.float32)
+            self_w[t, i] = np.float32(w[i, i])
+
+    # uniform fast path: one scalar self weight + one scalar edge weight and
+    # a full (regular) slot occupancy everywhere — the precondition for the
+    # coefficient-after-sum expression the bit-exact ring contract needs
+    uniform = None
+    pos_w = nbr_w[nbr_w > 0]
+    if (d > 0 and pos_w.size == T * M * d
+            and np.all(pos_w == pos_w.flat[0])
+            and np.all(self_w == self_w.flat[0])):
+        uniform = (float(self_w.flat[0]), float(pos_w.flat[0]))
+
+    ring = bool(
+        uniform is not None and d == 2 and T == 1 and M > 2
+        and all(set(nbr[0, i]) == {(i - 1) % M, (i + 1) % M}
+                for i in range(M)))
+    return MixPlan(topology=topology, M=M, degree=d, period=T,
+                   nbr_np=nbr, nbr_w_np=nbr_w, self_w_np=self_w,
+                   uniform=uniform, ring=ring,
+                   drop_prob=float(getattr(topology, "drop_prob", 0.0)),
+                   churn_prob=float(getattr(topology, "churn_prob", 0.0)))
+
+
+def _round_slice(arr: np.ndarray, r, period: int):
+    """Select the round's (M, ...) slab from a (T, M, ...) stack; static
+    topologies skip the dynamic index entirely."""
+    import jax
+    import jax.numpy as jnp
+    if period == 1:
+        return jnp.asarray(arr[0])
+    return jax.lax.dynamic_index_in_dim(jnp.asarray(arr), jnp.mod(r, period),
+                                        0, keepdims=False)
+
+
+def _fault_adjusted_rows(plan: MixPlan, nbr, r, key):
+    """(self_w, nbr_w) rows for round r with this round's fault realization
+    folded in: dropped slots zeroed, their mass moved to the diagonal — the
+    realized matrix stays symmetric doubly stochastic."""
+    import jax.numpy as jnp
+    from repro.topology.faults import draw_fault_masks
+    w_row = _round_slice(plan.nbr_w_np, r, plan.period)
+    s_row = _round_slice(plan.self_w_np, r, plan.period)
+    if not plan.faulty:
+        return s_row, w_row
+    keep, _up = draw_fault_masks(key, plan.M, plan.drop_prob, plan.churn_prob)
+    keep_slots = keep[jnp.arange(plan.M)[:, None], nbr]
+    s_row = s_row + jnp.sum(w_row * (1.0 - keep_slots), axis=1)
+    return s_row, w_row * keep_slots
+
+
+def mix_stacked(tree, plan: MixPlan, r=0, key=None):
+    """One gossip round on a stacked (M, ...) pytree: t ← W_r t, with W_r
+    the round's (fault-realized) mixing matrix, evaluated as a sparse
+    neighbor gather. ``r`` and ``key`` may be traced (the engine passes the
+    round index and the local-update key)."""
+    import jax
+    import jax.numpy as jnp
+    if plan.degree == 0 or plan.M <= 1:
+        return tree
+
+    if plan.ring and not plan.faulty:
+        # the pre-refactor ``_ring_mix`` lowering, verbatim — roll-based
+        # neighbor reads keep the XLA fusion (and therefore the float
+        # rounding) bit-identical to the historical DP-DSGT trajectories
+        s, w = plan.uniform
+
+        def mix_r(t):
+            return s * t + w * (jnp.roll(t, 1, axis=0)
+                                + jnp.roll(t, -1, axis=0))
+
+        return jax.tree_util.tree_map(mix_r, tree)
+
+    nbr = _round_slice(plan.nbr_np, r, plan.period)
+
+    if plan.uniform is not None and not plan.faulty:
+        s, w = plan.uniform
+
+        def mix_u(t):
+            acc = t[nbr[:, 0]]
+            for k in range(1, plan.degree):
+                acc = acc + t[nbr[:, k]]
+            return s * t + w * acc        # the same coefficient-after-sum shape
+
+        return jax.tree_util.tree_map(mix_u, tree)
+
+    s_row, w_row = _fault_adjusted_rows(plan, nbr, r, key)
+
+    def mix_g(t):
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        acc = s_row.reshape(ex) * t
+        for k in range(plan.degree):
+            acc = acc + w_row[:, k].reshape(ex) * t[nbr[:, k]]
+        return acc.astype(t.dtype)
+
+    return jax.tree_util.tree_map(mix_g, tree)
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution (inside a shard_map region over the client axis)
+# ---------------------------------------------------------------------------
+
+
+def edges_shard_resident(plan: MixPlan, ctx) -> bool:
+    """Host-side layout check: every positive-weight edge stays inside one
+    mesh slice of ``ctx.m`` rows — mixing then needs no collective at all
+    (the topology twin of P4's pod-resident groups)."""
+    if plan.period != 1:
+        return False
+    m = ctx.m
+    rows = np.arange(plan.M)[:, None]
+    live = plan.nbr_w_np[0] > 0
+    return bool(np.all(~live | (rows // m == plan.nbr_np[0] // m)))
+
+
+def _halo_ring_mix(tree, plan: MixPlan, ctx):
+    """Shard-aligned ring gossip as a ppermute halo exchange — each slice
+    sends only its edge rows to its mesh neighbors. Bit-identical arithmetic
+    to the historical ``_ring_mix_sharded``."""
+    import jax
+    import jax.numpy as jnp
+    s, w = plan.uniform
+    fwd = [(i, (i + 1) % ctx.n) for i in range(ctx.n)]
+    bwd = [(i, (i - 1) % ctx.n) for i in range(ctx.n)]
+
+    def mix(t):
+        prev_last = jax.lax.ppermute(t[-1:], ctx.axis, fwd)
+        next_first = jax.lax.ppermute(t[:1], ctx.axis, bwd)
+        left = jnp.concatenate([prev_last, t[:-1]], axis=0)
+        right = jnp.concatenate([t[1:], next_first], axis=0)
+        return s * t + w * (left + right)
+
+    return jax.tree_util.tree_map(mix, tree)
+
+
+def _pad_rows_np(arr: np.ndarray, target: int, fill):
+    if arr.shape[0] == target:
+        return arr
+    pad = np.full((target - arr.shape[0],) + arr.shape[1:], fill,
+                  arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def _local_mix(tree, plan: MixPlan, r, key, ctx):
+    """Slice-local gather mix for shard-resident topologies: global neighbor
+    indices are localized against the shard offset; padded rows self-loop
+    with zero weight. Same per-row arithmetic as the single-device paths."""
+    import jax.numpy as jnp
+    import jax
+    M, d = plan.M, plan.degree
+    nbr_pad = _pad_rows_np(plan.nbr_np[0].astype(np.int32), ctx.M_pad, 0)
+    for i in range(M, ctx.M_pad):
+        nbr_pad[i] = i          # padded slots reference themselves
+    local_nbr = (ctx.shard_rows(jnp.asarray(nbr_pad))
+                 - ctx.shard_offset())
+
+    if plan.uniform is not None and not plan.faulty:
+        s, w = plan.uniform
+
+        def mix_u(t):
+            acc = t[local_nbr[:, 0]]
+            for k in range(1, d):
+                acc = acc + t[local_nbr[:, k]]
+            return s * t + w * acc
+
+        return jax.tree_util.tree_map(mix_u, tree)
+
+    s_full, w_full = _fault_adjusted_rows(plan, jnp.asarray(plan.nbr_np[0]),
+                                          r, key)
+    s_row = ctx.shard_rows(jnp.concatenate(
+        [s_full, jnp.ones((ctx.M_pad - M,), s_full.dtype)]) if ctx.M_pad != M
+        else s_full)
+    w_row = ctx.shard_rows(jnp.concatenate(
+        [w_full, jnp.zeros((ctx.M_pad - M, d), w_full.dtype)])
+        if ctx.M_pad != M else w_full)
+
+    def mix_g(t):
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        acc = s_row.reshape(ex) * t
+        for k in range(d):
+            acc = acc + w_row[:, k].reshape(ex) * t[local_nbr[:, k]]
+        return acc.astype(t.dtype)
+
+    return jax.tree_util.tree_map(mix_g, tree)
+
+
+def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx):
+    """Sharded twin of ``mix_stacked`` (call inside the shard_map region):
+
+      ring, shard-aligned, fault-free → ppermute halo exchange;
+      all edges shard-resident         → slice-local gather (no collective);
+      anything else                    → all_gather → mix → re-shard, which
+                                         is bit-exact with the single-device
+                                         step by construction.
+
+    Fault draws are replicated (every shard draws the identical (M, M) keep
+    matrix from the same key) so realized topologies agree across layouts.
+    """
+    if plan.degree == 0 or plan.M <= 1:
+        return tree
+    if plan.ring and not plan.faulty and ctx.M_pad == ctx.M:
+        return _halo_ring_mix(tree, plan, ctx)
+    if edges_shard_resident(plan, ctx):
+        return _local_mix(tree, plan, r, key, ctx)
+    full = ctx.gather(tree)
+    return ctx.scatter_like(mix_stacked(full, plan, r, key), full)

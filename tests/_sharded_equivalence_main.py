@@ -33,15 +33,19 @@ def main() -> None:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import topology as topo_lib
     from repro.baselines.dp_dsgt import DPDSGTStrategy
     from repro.baselines.fedavg import FedAvgStrategy
     from repro.baselines.local import LocalStrategy
+    from repro.baselines.proxyfl import ProxyFLStrategy
+    from repro.baselines.scaffold import ScaffoldStrategy
     from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
     from repro.core.p2p import P2PNetwork
     from repro.core.p4 import P4Strategy, P4Trainer
     from repro.engine import (AsyncStaleness, ClientSampling, ClientShardCtx,
                               Engine, FederatedData, ShardedEngine)
     from repro.launch.mesh import make_client_mesh
+    from repro.topology.mixing import edges_shard_resident, make_plan
 
     assert len(jax.devices()) == 8, jax.devices()
     mesh8 = make_client_mesh()
@@ -87,15 +91,59 @@ def main() -> None:
         feat_dim=feat, num_classes=classes, lr=0.5),
         schedule=lambda: ClientSampling(q=0.5), data=data6)
 
+    # the gather reduction keeps the strict bit-exact contract; the default
+    # psum tree-reduction is verified separately (tolerance + vs-gather)
     compare("fedavg_full", lambda: FedAvgStrategy(
         feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.5,
-        user_ratio=0.8))
+        user_ratio=0.8, reduce="gather"))
     compare("fedavg_sampling", lambda: FedAvgStrategy(
-        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4,
+        reduce="gather"),
         schedule=lambda: ClientSampling(q=0.6))
     compare("fedavg_async0", lambda: FedAvgStrategy(
-        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4,
+        reduce="gather"),
         schedule=lambda: AsyncStaleness(staleness=0))
+
+    # psum-tree cohort reduction (the default): bit-close to single-device
+    # and to the gather path on the same mesh
+    compare("fedavg_psum_full", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.5,
+        user_ratio=0.8))
+    compare("fedavg_psum_sampling", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        schedule=lambda: ClientSampling(q=0.6))
+
+    def fedavg_sharded(reduce):
+        strat = FedAvgStrategy(feat_dim=feat, num_classes=classes, lr=0.5,
+                               clip=1.0, sigma=0.5, user_ratio=0.8,
+                               reduce=reduce)
+        return ShardedEngine(strat, eval_every=3, mesh=mesh8).fit(
+            data8, rounds=8, key=key, batch_size=8)
+
+    st_p, h_p = fedavg_sharded("psum")
+    st_g, h_g = fedavg_sharded("gather")
+    results["fedavg_psum_vs_gather"] = {
+        "rounds_equal": h_p.rounds == h_g.rounds,
+        "accuracy_maxdiff": float(max(abs(a - b) for a, b in
+                                      zip(h_p.accuracy, h_g.accuracy))),
+        "state_maxdiff": tree_maxdiff(st_p, st_g),
+    }
+
+    # ---------------- scaffold / proxyfl: sharded-hook ports ----------------
+    compare("scaffold_full", lambda: ScaffoldStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4))
+    compare("scaffold_sampling", lambda: ScaffoldStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        schedule=lambda: ClientSampling(q=0.6))
+    compare("scaffold_uneven", lambda: ScaffoldStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        data=data6)
+    compare("proxyfl_full", lambda: ProxyFLStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4))
+    compare("proxyfl_uneven", lambda: ProxyFLStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4),
+        data=data6)
 
     compare("dsgt_full", lambda: DPDSGTStrategy(
         feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5))
@@ -109,6 +157,38 @@ def main() -> None:
         feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.4),
         schedule=lambda: AsyncStaleness(staleness=2))
 
+    # -------------- topology subsystem: non-ring graphs + faults ------------
+    # ISSUE 5 acceptance: a non-ring topology (4-regular circulant expander,
+    # edges cross every slice boundary → the gather mixing path) and a faulty
+    # run (drop + churn drawn in-jit, replicated across slices)
+    expander = topo_lib.k_regular(M, 4)
+    compare("dsgt_topology_expander", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=expander))
+    compare("dsgt_topology_faulty", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=expander.with_faults(0.25, 0.1)))
+    compare("dsgt_gossip_sequence", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=topo_lib.gossip_matchings(M, period=4, seed=0)))
+
+    # shard-resident topology on a 2-slice mesh: the mix needs no collective
+    mesh2_t = make_client_mesh(2)
+    resident_topo = topo_lib.group_clustered([[0, 1, 2, 3], [4, 5, 6, 7]], M,
+                                             bridge=False)
+    results["topology_resident_layout"] = {
+        "resident_on_2": edges_shard_resident(
+            make_plan(resident_topo), ClientShardCtx(mesh2_t, "clients", M)),
+        "resident_on_8": edges_shard_resident(
+            make_plan(resident_topo), ClientShardCtx(mesh8, "clients", M)),
+    }
+    compare("dsgt_topology_resident", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=resident_topo), mesh=mesh2_t)
+    compare("dsgt_topology_resident_faulty", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=resident_topo.with_faults(0.3, 0.0)), mesh=mesh2_t)
+
     # ---------------- P4: strategy-level (fixed groups) across schedules ----
     def p4_cfg(rounds=8):
         return RunConfig(dp=DPConfig(epsilon=15.0, rounds=rounds,
@@ -116,12 +196,14 @@ def main() -> None:
                          p4=P4Config(group_size=4, sample_peers=7),
                          train=TrainConfig(learning_rate=0.5))
 
-    def mk_p4(groups):
+    def mk_p4(groups, topology=None):
         def mk():
             strat = P4Strategy(trainer=P4Trainer(feat_dim=feat,
                                                  num_classes=classes,
                                                  cfg=p4_cfg()))
             strat.set_groups([list(g) for g in groups], M)
+            if topology is not None:
+                strat.set_topology(topology)
             return strat
         return mk
 
@@ -145,6 +227,14 @@ def main() -> None:
     compare("p4_full_resident", mk_p4(resident), mesh=mesh2)
     compare("p4_sampling_resident", mk_p4(resident), mesh=mesh2,
             schedule=lambda: ClientSampling(q=0.5))
+
+    # fault-injected P4: member↔aggregator links drop in-jit; the resident
+    # layout slices the replicated fault mask, the spanning one gathers
+    p4_fault_topo = topo_lib.group_clustered(
+        [list(g) for g in resident], M).with_faults(0.3, 0.1)
+    compare("p4_faulty_resident", mk_p4(resident, p4_fault_topo), mesh=mesh2)
+    compare("p4_faulty_gather", mk_p4(spanning, topo_lib.group_clustered(
+        [list(g) for g in spanning], M).with_faults(0.3, 0.1)))
 
     # ---------------- P4 end-to-end: bootstrap -> grouping -> co-train ------
     protos2 = rng.normal(size=(2, 4, 20)).astype(np.float32) * 2

@@ -1,0 +1,331 @@
+"""Topology-subsystem invariants (ISSUE 5), extending the
+``_hypothesis_compat`` property tier:
+
+  * every builder's mixing matrix is symmetric doubly stochastic;
+  * every (connectivity-ensuring) builder returns a connected graph;
+  * the spectral gap is monotone along the degree chain ring → 4-regular →
+    fully connected;
+  * gossip iteration converges every node to the global mean;
+  * in-jit fault realizations preserve row- AND column-stochasticity
+    (constant vectors are fixed points; the global mean is conserved);
+  * DP-DSGT on the ``ring`` topology is bit-exact with the pre-refactor
+    ``_ring_mix`` trajectory (the ring is literally the special case of the
+    general sparse mixing step);
+
+plus unit coverage for plan compilation, value-hashing, routing, and the
+per-link byte/hop ledger.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import topology as topo_lib
+from repro.config import TopologyConfig
+from repro.core.p2p import P2PNetwork
+from repro.topology import (MixPlan, is_connected, is_doubly_stochastic,
+                            make_plan, make_topology, mix_stacked)
+
+_settings = settings(max_examples=20, deadline=None)
+
+FAMILIES = ["ring", "full", "torus", "kregular", "exponential", "erdos",
+            "smallworld"]
+
+
+def _build(family: str, M: int, k: int, seed: int):
+    return make_topology(TopologyConfig(family=family, k=k, seed=seed), M)
+
+
+# ---------------------------------------------------------------------------
+# property tier
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.sampled_from(FAMILIES), st.integers(4, 24), st.integers(2, 6),
+       st.integers(0, 5))
+def test_mixing_matrices_doubly_stochastic(family, M, k, seed):
+    topo = _build(family, M, k, seed)
+    w = topo.weights
+    assert np.array_equal(w, w.T)
+    assert is_doubly_stochastic(w), (family, M, k, seed)
+    assert not np.any(np.diag(topo.adjacency))
+
+
+@_settings
+@given(st.sampled_from(FAMILIES), st.integers(4, 24), st.integers(2, 6),
+       st.integers(0, 5))
+def test_symmetric_graphs_connected(family, M, k, seed):
+    topo = _build(family, M, k, seed)
+    assert np.array_equal(topo.adjacency, topo.adjacency.T)
+    assert topo.is_connected(), (family, M, k, seed)
+
+
+@_settings
+@given(st.integers(6, 32))
+def test_spectral_gap_monotone_in_degree(M):
+    """Denser circulants mix faster: gap(ring) ≤ gap(4-regular) ≤
+    gap(complete) = 1."""
+    g2 = topo_lib.k_regular(M, 2).spectral_gap()
+    g4 = topo_lib.k_regular(M, 4).spectral_gap()
+    gf = topo_lib.fully_connected(M).spectral_gap()
+    assert g2 <= g4 + 1e-9 <= gf + 2e-9, (M, g2, g4, gf)
+    assert abs(gf - 1.0) < 1e-9
+
+
+@_settings
+@given(st.sampled_from(["ring", "kregular", "exponential", "smallworld"]),
+       st.integers(4, 16), st.integers(0, 3))
+def test_gossip_iteration_converges_to_global_mean(family, M, seed):
+    topo = _build(family, M, 4, seed)
+    plan = make_plan(topo)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (M, 3))
+    cur = {"w": x}
+    for _ in range(400):
+        cur = mix_stacked(cur, plan)
+    target = np.broadcast_to(np.asarray(jnp.mean(x, axis=0)), (M, 3))
+    np.testing.assert_allclose(np.asarray(cur["w"]), target, atol=1e-3)
+
+
+@_settings
+@given(st.floats(0.05, 0.9), st.floats(0.0, 0.5), st.integers(0, 5))
+def test_fault_masks_preserve_row_stochasticity(drop, churn, seed):
+    """Every realized fault matrix keeps rows summing to 1 (constant vectors
+    are fixed points) and, being symmetric, columns too (the global mean is
+    conserved) — checked through the jitted mixing step itself."""
+    M = 10
+    topo = topo_lib.k_regular(M, 4).with_faults(drop, churn)
+    plan = make_plan(topo)
+    key = jax.random.PRNGKey(seed)
+    ones = {"w": jnp.ones((M, 4))}
+    x = {"w": jax.random.normal(key, (M, 4))}
+    mixf = jax.jit(lambda t, r, k: mix_stacked(t, plan, r, k))
+    for r in range(4):
+        rk = jax.random.fold_in(key, r)
+        out = mixf(ones, r, rk)
+        np.testing.assert_allclose(np.asarray(out["w"]), 1.0, atol=1e-5)
+        mixed = mixf(x, r, rk)
+        np.testing.assert_allclose(float(jnp.mean(mixed["w"])),
+                                   float(jnp.mean(x["w"])), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ring bit-exactness: the acceptance contract of the refactor
+# ---------------------------------------------------------------------------
+
+def _legacy_ring_mix(stacked, self_w: float = 0.5):
+    """The pre-refactor ``dp_dsgt._ring_mix``, frozen verbatim as the
+    reference the new subsystem must reproduce bit-for-bit."""
+    def mix(t):
+        left = jnp.roll(t, 1, axis=0)
+        right = jnp.roll(t, -1, axis=0)
+        return self_w * t + (1 - self_w) / 2 * (left + right)
+    return jax.tree_util.tree_map(mix, stacked)
+
+
+def test_ring_plan_bit_exact_with_legacy_ring_mix(key):
+    plan = make_plan(topo_lib.ring(8))
+    assert plan.ring and plan.uniform == (0.5, 0.25)
+    tree = {"w": jax.random.normal(key, (8, 5)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (8,))}
+    out = jax.jit(lambda t: mix_stacked(t, plan))(tree)
+    ref = jax.jit(_legacy_ring_mix)(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class _LegacyRingDSGT:
+    """Factory: DPDSGTStrategy whose mixes are the frozen legacy roll-based
+    ring — the pre-refactor trajectory generator."""
+
+    def __new__(cls, **kw):
+        from repro.baselines.dp_dsgt import DPDSGTStrategy
+
+        class Legacy(DPDSGTStrategy):
+            def mix(self, stacked_tree, r, key):
+                return _legacy_ring_mix(stacked_tree)
+
+        return Legacy(**kw)
+
+
+@pytest.fixture(scope="module")
+def dsgt_data():
+    rng = np.random.default_rng(0)
+    M, feat, classes, n = 8, 12, 3, 32
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, n))
+    xs = protos[ys] + rng.normal(size=(M, n, feat)).astype(np.float32) * 0.4
+    return xs, ys.astype(np.int32)
+
+
+def _run_dsgt(strategy, data, key):
+    from repro.engine import Engine, FederatedData
+    xs, ys = data
+    fd = FederatedData(xs, ys, jnp.asarray(xs), jnp.asarray(ys))
+    return Engine(strategy, eval_every=3).fit(fd, rounds=8, key=key,
+                                              batch_size=8)
+
+
+def test_dsgt_ring_history_bit_exact_with_prerefactor(dsgt_data, key):
+    """ISSUE 5 acceptance: DP-DSGT on ``ring`` via the topology subsystem
+    reproduces the pre-refactor ``_ring_mix`` history (and state) exactly."""
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    mk = dict(feat_dim=12, num_classes=3, lr=0.3, clip=1.0, sigma=0.5)
+    st_new, h_new = _run_dsgt(DPDSGTStrategy(**mk), dsgt_data, key)
+    st_old, h_old = _run_dsgt(_LegacyRingDSGT(**mk), dsgt_data, key)
+    assert h_new.rounds == h_old.rounds
+    assert h_new.accuracy == h_old.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(st_new),
+                    jax.tree_util.tree_leaves(st_old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dsgt_explicit_ring_equals_default(dsgt_data, key):
+    """topology=ring(M) is the same computation as the built-in default."""
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    mk = dict(feat_dim=12, num_classes=3, lr=0.3, clip=1.0, sigma=0.5)
+    st1, h1 = _run_dsgt(DPDSGTStrategy(**mk), dsgt_data, key)
+    st2, h2 = _run_dsgt(DPDSGTStrategy(topology=topo_lib.ring(8), **mk),
+                        dsgt_data, key)
+    assert h1.accuracy == h2.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(st1),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dsgt_rejects_mismatched_topology(dsgt_data, key):
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    strat = DPDSGTStrategy(feat_dim=12, num_classes=3,
+                           topology=topo_lib.ring(5))
+    with pytest.raises(ValueError, match="M=8"):
+        _run_dsgt(strat, dsgt_data, key)
+
+
+# ---------------------------------------------------------------------------
+# plans, hashing, time variation
+# ---------------------------------------------------------------------------
+
+def test_plan_compilation_flags():
+    p = make_plan(topo_lib.ring(8))
+    assert isinstance(p, MixPlan) and p.ring and p.period == 1 and p.degree == 2
+    p = make_plan(topo_lib.k_regular(8, 4))
+    # regular + metropolis ⇒ constant rows: the uniform fast path applies,
+    # but the neighbor set is not the cycle so the ring flag must not
+    assert not p.ring and p.degree == 4 and p.uniform is not None
+    p = make_plan(topo_lib.erdos_renyi(10, 0.3, seed=1))
+    assert p.uniform is None               # irregular ⇒ general path
+    p = make_plan(topo_lib.gossip_matchings(9, period=4))
+    assert p.period == 4 and p.degree == 1
+    p = make_plan(topo_lib.ring(8).with_faults(0.2, 0.1))
+    assert p.faulty and p.drop_prob == 0.2 and p.churn_prob == 0.1
+
+
+def test_topology_value_hashing():
+    assert topo_lib.ring(8) == topo_lib.ring(8)
+    assert hash(topo_lib.ring(8)) == hash(topo_lib.ring(8))
+    assert topo_lib.ring(8) != topo_lib.ring(10)
+    assert topo_lib.ring(8) != topo_lib.ring(8).with_faults(0.1)
+    assert topo_lib.ring(8) != topo_lib.k_regular(8, 2, weighting="uniform")
+    tv = topo_lib.gossip_matchings(8, 4, seed=1)
+    assert tv == topo_lib.gossip_matchings(8, 4, seed=1)
+    assert tv != topo_lib.gossip_matchings(8, 4, seed=2)
+
+
+def test_group_clustered_matches_groups():
+    groups = [[0, 1, 2], [3, 4], [5, 6, 7]]
+    topo = topo_lib.group_clustered(groups, 8, bridge=False)
+    for g in groups:
+        for a in g:
+            for b in g:
+                if a != b:
+                    assert topo.adjacency[a, b]
+    assert not topo.adjacency[0, 3] and not topo.is_connected()
+    bridged = topo_lib.group_clustered(groups, 8, bridge=True)
+    assert bridged.is_connected()
+
+
+def test_time_varying_union_connected():
+    tv = topo_lib.gossip_matchings(8, period=8, seed=0)
+    assert tv.is_connected()          # union over the period
+    assert not tv.topologies[0].is_connected()   # one matching never is
+
+
+def test_make_topology_none_and_unknown():
+    assert make_topology(TopologyConfig(family="none"), 8) is None
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology(TopologyConfig(family="mystery"), 8)
+    with pytest.raises(ValueError, match="groups"):
+        make_topology(TopologyConfig(family="group"), 8)
+
+
+def test_uniform_weighting_requires_regular():
+    with pytest.raises(ValueError, match="regular"):
+        topo_lib.erdos_renyi(12, 0.3, seed=3, weighting="uniform")
+
+
+# ---------------------------------------------------------------------------
+# routing + per-link accounting
+# ---------------------------------------------------------------------------
+
+def test_shortest_hops_and_route():
+    topo = topo_lib.ring(8)
+    dist, nh = topo_lib.shortest_hops(topo.adjacency)
+    assert dist[0, 4] == 4 and dist[0, 1] == 1 and dist[2, 2] == 0
+    path = topo_lib.route(nh, dist, 0, 3)
+    assert len(path) == dist[0, 3]
+    for (u, v) in path:                      # every hop is a physical link
+        assert topo.adjacency[u, v]
+    assert path[0][0] == 0 and path[-1][1] == 3
+    # unreachable pairs degrade to one direct message
+    iso = topo_lib.group_clustered([[0, 1], [2, 3]], 4, bridge=False)
+    d2, n2 = topo_lib.shortest_hops(iso.adjacency)
+    assert d2[0, 2] == -1 and topo_lib.route(n2, d2, 0, 2) == [(0, 2)]
+
+
+def test_per_link_and_hop_accounting():
+    net = P2PNetwork(8)
+    topo = topo_lib.ring(8)
+    dist, nh = topo_lib.shortest_hops(topo.adjacency)
+    payload = {"w": np.ones((3,), np.float32)}
+    n = topo_lib.send_routed(net, 0, 3, payload, "proxy_update", 0, dist, nh)
+    assert net.total_hops() == 3 and net.relayed_messages() == 2
+    assert n == net.total_bytes()
+    links = net.per_link()
+    assert set(links) == {(0, 1), (1, 2), (2, 3)}
+    assert len(set(links.values())) == 1     # same payload on every hop
+    summary = topo_lib.per_link_summary(net)
+    assert summary["links_used"] == 3 and summary["hops_total"] == 3
+
+
+def test_dsgt_gossip_byte_accounting_respects_faults(dsgt_data, key):
+    """Engine-logged gossip bytes only flow on links the traced fault draw
+    kept alive — re-derived host-side from the same phase key."""
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    from repro.engine import Engine, FederatedData
+    from repro.topology.faults import host_fault_masks
+    xs, ys = dsgt_data
+    topo = topo_lib.ring(8).with_faults(0.4, 0.0)
+    net = P2PNetwork(8)
+    strat = DPDSGTStrategy(feat_dim=12, num_classes=3, lr=0.3,
+                           topology=topo)
+    fd = FederatedData(xs, ys, jnp.asarray(xs), jnp.asarray(ys))
+    Engine(strat, eval_every=2, network=net).fit(fd, rounds=6, key=key,
+                                                 batch_size=8)
+    assert 0 < net.num_messages() < 6 * 16   # faults dropped some edges
+    _, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+    for m in net.log:
+        assert topo.adjacency[m.src, m.dst]
+        keep, _ = host_fault_masks(phase_key, m.rnd, 1, 8, 0.4, 0.0)
+        assert keep[m.src, m.dst] > 0, m
+
+
+def test_fedavg_psum_fingerprint_differs_from_gather():
+    """reduce is a dataclass field, so the two reduction modes can never
+    share a compiled sharded chunk."""
+    from repro.baselines.fedavg import FedAvgStrategy
+    a = FedAvgStrategy(feat_dim=4, num_classes=2)
+    b = FedAvgStrategy(feat_dim=4, num_classes=2, reduce="gather")
+    assert a.fingerprint() != b.fingerprint()
