@@ -9,6 +9,7 @@
   bench_engine         (framework)     scan round loop vs legacy Python loop
   bench_schedule       (framework)     round schedules vs the PR-2 loop
   bench_topology       (framework)     gossip loop vs graph family/density
+  bench_resilience     (framework)     accuracy/overhead vs fault regime
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
 Suites exposing ``LAST_RECORDS`` also write ``BENCH_<suite>.json``.
@@ -37,12 +38,14 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
                             bench_kernels, bench_overhead, bench_privacy,
-                            bench_roofline, bench_schedule, bench_topology)
+                            bench_resilience, bench_roofline, bench_schedule,
+                            bench_topology)
     suites = {
         "kernels": bench_kernels,
         "engine": bench_engine,
         "schedule": bench_schedule,
         "topology": bench_topology,
+        "resilience": bench_resilience,
         "overhead": bench_overhead,
         "roofline": bench_roofline,
         "privacy": bench_privacy,

@@ -124,17 +124,22 @@ class DPDSGTStrategy(Strategy):
 
     # ------------------------------------------------------ byte accounting
     def log_communication(self, net, state, r: int, mask=None,
-                          phase_key=None) -> None:
+                          phase_key=None, faults=None) -> None:
         """§4.5-style gossip accounting: every alive directed edge carries
         the sender's BOTH shared quantities — the noised model x̃ and the
         gradient tracker ỹ (one exchange per round mixes both, see
         ``local_update``). Absent cohort members (sampling schedule) and
         dropped links / churned nodes (the round's fault realization,
-        re-derived from ``phase_key``) contribute zero bytes."""
+        re-derived from ``phase_key``) contribute zero bytes. Under a
+        correlated fault process (``faults`` — the engine's replayed
+        ``HostFaults``) the realized keep matrix supersedes the topology's
+        i.i.d. draw, mirroring the traced mix."""
         if self._mix_plan is None or self.topology is None:
             return
         keep = None
-        if self._mix_plan.faulty and phase_key is not None:
+        if faults is not None:
+            keep = faults.keep
+        elif self._mix_plan.faulty and phase_key is not None:
             from repro.topology.faults import host_fault_masks
             keep, _ = host_fault_masks(phase_key, r, 1, self._mix_plan.M,
                                        self._mix_plan.drop_prob,

@@ -1,1 +1,4 @@
-from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.checkpoint import (CheckpointError,
+                                         load_checkpoint_metadata,
+                                         latest_step, restore_checkpoint,
+                                         save_checkpoint, verify_checkpoint)

@@ -1,19 +1,42 @@
-"""Flat-npz pytree checkpointing with step metadata.
+"""Crash-safe flat-npz pytree checkpointing with verified sidecar metadata.
 
 Leaves are addressed by their tree path ("params/blocks/attn_attn/wq"); the
 treedef is reconstructed from the template pytree at restore time, so restore
 is shape- and dtype-checked against the current model definition.
+
+Durability contract (the chaos tier SIGKILLs a training run mid-write and
+resumes from whatever survived):
+
+  * the archive is serialized fully in memory, written to a deterministic
+    ``<path>.tmp`` through an explicit handle, fsync'd, and renamed into
+    place — a reader never observes a torn ``ckpt_*.npz``;
+  * a ``ckpt_*.json`` sidecar (same atomic dance) records the step, a CRC-32
+    of the archive bytes, and the byte count, plus any caller metadata (the
+    engine stores its ``History`` there so a resumed run's record is
+    bit-exact with an uninterrupted one);
+  * ``latest_step`` only reports steps whose archive verifies against the
+    sidecar, skipping ``.tmp`` orphans and torn/corrupt files, so auto-resume
+    falls back to the newest checkpoint that actually survived the crash;
+  * ``keep_last`` retains a bounded history, deleting npz+json pairs oldest
+    first.
 """
 from __future__ import annotations
 
+import io
 import json
-import jax.numpy as jnp
 import os
 import re
+import zlib
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """A checkpoint exists but cannot be trusted (torn write, bad checksum,
+    or a leaf that no longer matches the template)."""
 
 
 def _flatten(tree):
@@ -36,39 +59,136 @@ def _seg(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dict] = None):
-    os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+def _npz_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def _json_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.json")
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """Deterministic temp name, explicit handle, fsync, rename — then fsync
+    the directory so the rename itself survives a crash."""
     tmp = path + ".tmp"
-    np.savez(tmp, **_flatten(tree))
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
-    meta = {"step": step, **(metadata or {})}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dirfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    except OSError:
+        pass   # some filesystems refuse directory fsync; rename still landed
+    finally:
+        os.close(dirfd)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None, keep_last: int = 0):
+    os.makedirs(directory, exist_ok=True)
+    buf = io.BytesIO()
+    np.savez(buf, **_flatten(tree))
+    data = buf.getvalue()
+    path = _npz_path(directory, step)
+    _atomic_write(path, data)
+    meta = {"step": int(step), "checksum": zlib.crc32(data),
+            "nbytes": len(data), **(metadata or {})}
+    _atomic_write(_json_path(directory, step), json.dumps(meta).encode())
+    if keep_last and keep_last > 0:
+        for old in _all_steps(directory)[:-keep_last]:
+            for p in (_npz_path(directory, old), _json_path(directory, old)):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _all_steps(directory: str):
     if not os.path.isdir(directory):
+        return []
+    # the $ anchor already excludes ckpt_*.npz.tmp orphans from a torn write
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+
+
+def verify_checkpoint(directory: str, step: int) -> bool:
+    """Cheap integrity check: archive bytes hash to the sidecar's CRC-32 and
+    match its length. Sidecar-less archives (pre-hardening writers) pass if
+    the zip at least parses."""
+    path = _npz_path(directory, step)
+    if not os.path.isfile(path):
+        return False
+    jpath = _json_path(directory, step)
+    if os.path.isfile(jpath):
+        try:
+            with open(jpath) as f:
+                meta = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            return False
+        if "checksum" in meta:
+            try:
+                with open(path, "rb") as f:
+                    data = f.read()
+            except OSError:
+                return False
+            return (len(data) == meta.get("nbytes", len(data))
+                    and zlib.crc32(data) == meta["checksum"])
+    try:
+        np.load(path).close()
+        return True
+    except Exception:
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest step whose checkpoint verifies — torn or corrupt archives are
+    skipped so auto-resume falls back to the last durable one."""
+    for step in reversed(_all_steps(directory)):
+        if verify_checkpoint(directory, step):
+            return step
+    return None
+
+
+def load_checkpoint_metadata(directory: str, step: int) -> Optional[dict]:
+    jpath = _json_path(directory, step)
+    if not os.path.isfile(jpath):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+    try:
+        with open(jpath) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
 
 
 def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None):
-    """Restore into the structure of ``template`` (shape/dtype enforced)."""
+    """Restore into the structure of ``template`` (shape/dtype enforced).
+    Raises ``CheckpointError`` on corruption and ``ValueError`` naming the
+    leaf path when the archive no longer matches the template."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    path = _npz_path(directory, step)
+    if not os.path.isfile(path):
+        raise FileNotFoundError(path)
+    if not verify_checkpoint(directory, step):
+        raise CheckpointError(f"checkpoint {path} failed integrity check "
+                              "(torn write or bit rot)")
     data = np.load(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
         key = "/".join(_seg(x) for x in p)
+        if key not in data:
+            raise ValueError(f"checkpoint {path} is missing leaf '{key}' "
+                             f"required by the template")
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf '{key}' has shape {tuple(arr.shape)} but "
+                f"the template expects {tuple(leaf.shape)} ({path})")
         leaves.append(jnp.asarray(arr).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -198,6 +198,28 @@ class ScheduleConfig:
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Correlated fault processes (``repro.resilience``).
+
+    Unlike ``TopologyConfig.drop_prob``/``churn_prob`` (i.i.d. per round),
+    these are Markov transition rates: links fail in bursts (Gilbert–Elliott),
+    nodes dwell in outages, partitions cut a sampled bisection for a random
+    stretch of rounds, and stragglers stay slow until they recover. All rates
+    zero = disabled (the engine's fault-free trace is untouched). When a
+    process is enabled it supersedes the topology's i.i.d. rates.
+    """
+    link_fail: float = 0.0        # per-edge good→bad rate (bursty links)
+    link_repair: float = 1.0      # bad→good; mean burst = 1/link_repair
+    node_fail: float = 0.0        # node outage rate
+    node_repair: float = 1.0      # mean outage = 1/node_repair rounds
+    partition_prob: float = 0.0   # chance a bisection partition starts
+    partition_repair: float = 0.5  # chance an active partition heals
+    slow_enter: float = 0.0       # straggler chain: fast→slow
+    slow_exit: float = 1.0        # slow→fast
+    quorum: float = 0.0           # P4: min up-fraction for group aggregation
+
+
+@dataclass(frozen=True)
 class KernelConfig:
     """Kernel backend selection + autotuning (repro.kernels.dispatch).
 
@@ -285,6 +307,7 @@ class RunConfig:
     kernels: KernelConfig = field(default_factory=KernelConfig)
     schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
     topology: TopologyConfig = field(default_factory=TopologyConfig)
+    faults: FaultConfig = field(default_factory=FaultConfig)
 
 
 # ---------------------------------------------------------------------------

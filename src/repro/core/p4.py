@@ -282,9 +282,15 @@ class P4Trainer:
             from repro.topology import make_topology
             strategy.set_topology(make_topology(topo_cfg, M, groups=groups))
 
+        # cfg.faults drives the co-train phase only: the bootstrap is the
+        # grouping signal, and a faulted bootstrap would conflate grouping
+        # noise with the resilience behavior under study
+        from repro.resilience import make_fault_process
+        faults = make_fault_process(self.cfg.faults, M) \
+            if getattr(self.cfg, "faults", None) is not None else None
         engine = make_engine(eval_every=eval_every, network=network,
                              checkpoint_dir=checkpoint_dir, schedule=schedule,
-                             ledger=ledger)
+                             ledger=ledger, faults=faults)
         states, history = engine.fit(data, rounds=rounds,
                                      key=jax.random.fold_in(key, 1),
                                      batch_size=bs, start_round=nb,
@@ -325,6 +331,7 @@ class P4Strategy(Strategy):
             sizes[gi] = len(g)
         self._group_members = jnp.asarray(members)
         self._group_sizes = jnp.asarray(sizes)
+        self.failover_count = 0  # rounds a group ran on a stand-in aggregator
         self.cache_token += 1    # aggregate() changed: invalidate engine chunks
 
     # ------------------------------------------------------------- topology
@@ -366,6 +373,46 @@ class P4Strategy(Strategy):
         rows = jnp.arange(M)
         return jnp.where(rows == agg, up, keep[rows, agg])
 
+    def _process_fault_mask(self, r, af):
+        """(M,) reach mask under a correlated fault realization — with
+        DETERMINISTIC FAILOVER: when the scheduled rotating aggregator is
+        down, the next-up member (in rotation order) takes over; a group
+        whose up-fraction is below the model's quorum — or with no member up
+        at all — falls back to local-only for the round (mask 0 everywhere,
+        so the masked group mean leaves every member untouched)."""
+        real, quorum = af.real, af.model.quorum
+        M = self.ids.shape[0]
+        rotation = max(self.trainer.cfg.p4.aggregator_rotation, 1)
+        members, sizes = self._group_members, self._group_sizes
+        G, tmax = members.shape
+        size = jnp.maximum(sizes, 1)
+        idx = (r // rotation) % size                         # scheduled slot
+        js = jnp.arange(tmax)
+        cand_slot = (idx[:, None] + js[None, :]) % size[:, None]
+        cand = members[jnp.arange(G)[:, None], cand_slot]    # (G, tmax)
+        valid = (js[None, :] < sizes[:, None]).astype(jnp.float32)
+        cand_up = real.up[cand] * valid
+        first = jnp.argmax(cand_up, axis=1)      # first up in rotation order
+        has_up = jnp.max(cand_up, axis=1)
+        agg_g = cand[jnp.arange(G), first]
+        up_counts = jax.ops.segment_sum(real.up, self.ids, self.num_groups)
+        frac_up = up_counts / size.astype(jnp.float32)
+        group_ok = ((has_up > 0) & (frac_up >= quorum)).astype(jnp.float32)
+        agg = agg_g[self.ids]
+        rows = jnp.arange(M)
+        reach = jnp.where(rows == agg, real.up[rows], real.keep[rows, agg])
+        return reach * group_ok[self.ids]
+
+    def _context_fault_mask(self, r):
+        """The correlated-process reach mask when the engine has a fault
+        process installed (trace-time context), else None. Supersedes the
+        topology's i.i.d. rates."""
+        from repro.resilience import current_faults
+        af = current_faults()
+        if af is None or self.ids is None:
+            return None
+        return self._process_fault_mask(r, af)
+
     def init(self, key, data: FederatedData, batch_size):
         return self.trainer.init_clients(key, data.num_clients)
 
@@ -379,6 +426,11 @@ class P4Strategy(Strategy):
     def aggregate(self, states, r, key):
         if self.ids is None:          # bootstrap phase: no groups yet
             return states
+        cfm = self._context_fault_mask(r)
+        if cfm is not None:
+            return {"private": states["private"],
+                    "proxy": masked_group_mean(states["proxy"], self.ids,
+                                               self.num_groups, cfm)}
         if self._has_faults():
             # fault-injected round: only members whose link to this round's
             # aggregator survived exchange proxies (same masked-mean math as
@@ -396,7 +448,10 @@ class P4Strategy(Strategy):
         Link faults compose multiplicatively with the cohort mask."""
         if self.ids is None:
             return states
-        if self._has_faults():
+        cfm = self._context_fault_mask(r)
+        if cfm is not None:
+            mask = mask * cfm
+        elif self._has_faults():
             mask = mask * self._fault_mask(r, key)
         return {"private": states["private"],
                 "proxy": masked_group_mean(states["proxy"], self.ids,
@@ -429,7 +484,10 @@ class P4Strategy(Strategy):
             # identical, x·1.0 is exact) while padded rows keep their value.
             # Fault draws are replicated (same key on every slice), so the
             # sliced fault mask realizes the identical topology everywhere.
-            if self._has_faults():
+            cfm = self._context_fault_mask(r)
+            if cfm is not None:
+                local = ctx.shard_rows(cfm)
+            elif self._has_faults():
                 local = ctx.shard_rows(self._fault_mask(r, key))
             else:
                 local = ctx.valid_mask()
@@ -446,7 +504,10 @@ class P4Strategy(Strategy):
         if self._groups_shard_resident(ctx):
             # local_mask is already zero on padded slots
             local = local_mask
-            if self._has_faults():
+            cfm = self._context_fault_mask(r)
+            if cfm is not None:
+                local = local * ctx.shard_rows(cfm)
+            elif self._has_faults():
                 local = local * ctx.shard_rows(self._fault_mask(r, key))
             return {"private": states["private"],
                     "proxy": masked_group_mean(states["proxy"],
@@ -488,8 +549,28 @@ class P4Strategy(Strategy):
         """Per-client PERSONALIZED (private) model."""
         return states["private"]
 
+    def _host_failover_plan(self, r: int, hf):
+        """Numpy twin of ``_process_fault_mask``'s aggregator selection: per
+        group ``(aggregator, ok, failed_over)`` for byte accounting and the
+        fault sweep's failover counts."""
+        rotation = max(self.trainer.cfg.p4.aggregator_rotation, 1)
+        plan = []
+        for g in self.groups:
+            size = len(g)
+            idx = (r // rotation) % size
+            agg, failed_over = None, False
+            for j in range(size):
+                cand = g[(idx + j) % size]
+                if hf.up[cand] > 0:
+                    agg, failed_over = cand, j > 0
+                    break
+            frac_up = float(sum(hf.up[i] for i in g)) / size
+            ok = agg is not None and frac_up >= hf.model.quorum
+            plan.append((agg, ok, failed_over))
+        return plan
+
     def log_communication(self, net, states, r: int, mask=None,
-                          phase_key=None) -> None:
+                          phase_key=None, faults=None) -> None:
         """§4.5 Phase-2 accounting: members → rotating aggregator → members,
         one per-client proxy payload per message (matches
         ``p2p.simulate_group_round`` for the same groups — tested). Under a
@@ -502,10 +583,41 @@ class P4Strategy(Strategy):
         byte/hop accounting), the aggregator is this round's full-group
         rotation (the same one the traced fault mask addresses), and the
         round's fault realization — re-derived from ``phase_key`` — zeroes
-        the dropped member↔aggregator exchanges."""
+        the dropped member↔aggregator exchanges.
+
+        With a correlated fault process (``faults`` — the engine's replayed
+        ``HostFaults``), the aggregator is the traced failover choice
+        (next-up member in rotation order), below-quorum groups fall silent
+        (local-only), and ``self.failover_count`` tallies rounds a group ran
+        on a stand-in aggregator."""
         if not self.groups:
             return
         rotation = self.trainer.cfg.p4.aggregator_rotation
+        if faults is not None:
+            from repro.topology.accounting import send_routed
+            dist, next_hop = (self._routing if getattr(self, "_routing", None)
+                              else (None, None))
+            for g, (agg, ok, failed_over) in zip(
+                    self.groups, self._host_failover_plan(r, faults)):
+                if not ok:
+                    continue
+                senders = [i for i in g
+                           if i != agg and (mask is None or mask[i] > 0)
+                           and faults.keep[i, agg] > 0]
+                if not senders:
+                    continue
+                if failed_over:
+                    self.failover_count = getattr(self, "failover_count",
+                                                  0) + 1
+                payload = jax.tree_util.tree_map(lambda t: t[g[0]],
+                                                 states["proxy"])
+                for i in senders:
+                    send_routed(net, i, agg, payload, "proxy_update", r,
+                                dist, next_hop)
+                for i in senders:
+                    send_routed(net, agg, i, payload, "aggregated_model", r,
+                                dist, next_hop)
+            return
         if self.topology is None:
             from repro.core.p2p import simulate_group_round
             for g in self.groups:

@@ -132,6 +132,12 @@ class Engine:
       ledger          — a ``PrivacyLedger``; advanced per executed chunk, its
                         cumulative (ε, δ) is recorded in ``History.metrics``
                         at every eval round.
+      faults          — a ``repro.resilience.FaultProcess``; its Markov state
+                        rides the scan carry, each round's realization reaches
+                        the schedule/strategy via the trace-time fault context,
+                        and host-side replay re-derives the exact masks for
+                        byte accounting and crash-resume fast-forward.
+      checkpoint_keep — retain only the newest k checkpoints (0 = keep all).
     """
     strategy: Strategy
     eval_every: int = 20
@@ -139,6 +145,8 @@ class Engine:
     checkpoint_dir: Optional[str] = None
     schedule: Optional[RoundSchedule] = None
     ledger: Optional[PrivacyLedger] = None
+    faults: Optional[Any] = None
+    checkpoint_keep: int = 0
 
     def __post_init__(self):
         if self.schedule is None:
@@ -153,6 +161,7 @@ class Engine:
         return (self.strategy.fingerprint(), self.schedule.fingerprint(),
                 length, batch_size,
                 tuple(sorted(self.strategy.runtime_params())),
+                None if self.faults is None else self.faults.fingerprint(),
                 self._mesh_fingerprint())
 
     def _mesh_fingerprint(self) -> Tuple:
@@ -167,6 +176,9 @@ class Engine:
         if fn is not None:
             return fn
         body = self.schedule.round_body(self.strategy, batch_size)
+        if self.faults is not None:
+            from repro.resilience import wrap_round_body
+            body = wrap_round_body(body, self.faults)
 
         def run(state, phase_key, train_x, train_y, start, rt):
             CHUNK_STATS["traces"] += 1   # python body executes per trace only
@@ -193,8 +205,13 @@ class Engine:
         train_x, train_y = self._train_arrays(data)
         rt = {k: jnp.asarray(v, jnp.float32)
               for k, v in self.strategy.runtime_params().items()}
-        state, (metrics, aux) = fn(state, phase_key, train_x, train_y,
+        carry = state if self.faults is None else (state, self._fault_state)
+        carry, (metrics, aux) = fn(carry, phase_key, train_x, train_y,
                                    jnp.asarray(start, jnp.int32), rt)
+        if self.faults is None:
+            state = carry
+        else:
+            state, self._fault_state = carry
         return state, metrics, aux
 
     # ------------------------------------------------- sharded-engine seams
@@ -231,6 +248,10 @@ class Engine:
         strategy = self.strategy
         init_key, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
         history = history if history is not None else History()
+        # the fault chains' time origin is the phase's first round as CALLED —
+        # a resumed fit passes the same start_round, so host replay rejoins
+        # the exact trajectory the killed run was on
+        self._fault_origin = start_round
 
         # resolve the resume point BEFORE calibration and init: calibrating
         # with the pre-resume start_round would size σ for rounds that will
@@ -260,13 +281,33 @@ class Engine:
             state = strategy.init(init_key, data, batch_size)
         state = self._prepare_state(state, data)
         if resume_step is not None:
-            from repro.checkpoint import restore_checkpoint
+            from repro.checkpoint import (load_checkpoint_metadata,
+                                          restore_checkpoint)
             saved, resume_step = restore_checkpoint(
                 self.checkpoint_dir,
                 strategy.state_to_save(self._finalize_state(state)),
                 resume_step)
             state = self._prepare_state(saved, data)
             start_round = resume_step + 1
+            # the sidecar carries the killed run's History: restoring it makes
+            # the resumed record bit-exact with an uninterrupted run (floats
+            # round-trip exactly through JSON's shortest-repr)
+            meta = load_checkpoint_metadata(self.checkpoint_dir, resume_step)
+            if meta and "history" in meta and not history.rounds:
+                h = meta["history"]
+                history.rounds[:] = [int(x) for x in h.get("rounds", [])]
+                history.accuracy[:] = [float(x) for x in h.get("accuracy", [])]
+                history.metrics.clear()
+                history.metrics.update({k: [float(x) for x in v]
+                                        for k, v in h.get("metrics", {}).items()})
+
+        self._fault_state = None
+        if self.faults is not None:
+            # fast-forward the fault chains to start_round by eager replay
+            # from the phase origin (bit-identical to the traced transitions)
+            from repro.resilience import fault_state_at
+            self._fault_state = fault_state_at(self.faults, phase_key,
+                                               self._fault_origin, start_round)
 
         boundaries = (eval_rounds(start_round, rounds, self.eval_every)
                       if evaluate else [])
@@ -285,6 +326,9 @@ class Engine:
             if "participation" in aux:
                 chunk_means["participation_rate"] = jnp.mean(
                     aux["participation"])
+            for k, v in (aux or {}).items():
+                if k.startswith("fault_"):
+                    chunk_means[k] = jnp.mean(v)
             if self.ledger is not None:
                 chunk_means.update(self.ledger.metrics())
             history.record(ev, jnp.mean(acc), chunk_means)
@@ -292,7 +336,12 @@ class Engine:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(self.checkpoint_dir, ev,
                                 strategy.state_to_save(
-                                    self._finalize_state(state)))
+                                    self._finalize_state(state)),
+                                metadata={"history": {
+                                    "rounds": history.rounds,
+                                    "accuracy": history.accuracy,
+                                    "metrics": history.metrics}},
+                                keep_last=self.checkpoint_keep)
         if cursor < rounds:  # tail (or the whole phase when evaluate=False)
             state, _, aux = self.run_rounds(state, data, phase_key, cursor,
                                             rounds, batch_size)
@@ -307,11 +356,20 @@ class Engine:
                      masks=None, phase_key=None) -> None:
         if self.network is None:
             return
+        frs = None
+        if self.faults is not None:
+            # re-derive the chunk's exact correlated realizations host-side,
+            # the same way host_fault_masks re-derives the i.i.d. ones
+            from repro.resilience import host_realizations
+            frs = host_realizations(self.faults, phase_key,
+                                    self._fault_origin, first_round,
+                                    last_round + 1)
         masks = None if masks is None else np.asarray(masks)
         for i, r in enumerate(range(first_round, last_round + 1)):
             mask = None if masks is None else masks[i]
-            self.strategy.log_communication(self.network, state, r, mask=mask,
-                                            phase_key=phase_key)
+            self.strategy.log_communication(
+                self.network, state, r, mask=mask, phase_key=phase_key,
+                faults=None if frs is None else frs[i])
 
 
 # ---------------------------------------------------------------------------

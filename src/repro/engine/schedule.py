@@ -40,6 +40,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.resilience import current_faults
+
+
+def _fault_blend(agg, base, w_rows, rows: int, w_scalar):
+    """Per-client staleness-discounted fold: client-stacked leaves blend with
+    their own realized weight, replicated/server leaves with the mean weight
+    (so single-device and sharded traces agree on non-stacked state)."""
+    def f(a, b):
+        if a.ndim >= 1 and a.shape[:1] == (rows,):
+            ww = w_rows.reshape((rows,) + (1,) * (a.ndim - 1))
+        else:
+            ww = w_scalar
+        return (ww * a + (1.0 - ww) * b).astype(b.dtype)
+    return jax.tree_util.tree_map(f, agg, base)
+
 
 def sample_client_batches(train_x, train_y, key, batch_size: Optional[int]):
     """Per-client minibatches drawn on device: (M, B, ...), (M, B).
@@ -104,10 +119,26 @@ class FullParticipation(RoundSchedule):
             rk = jax.random.fold_in(phase_key, r)
             xs, ys = sample_client_batches(
                 train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
-            state, metrics = strategy.local_update(
+            af = current_faults()
+            if af is None:
+                state, metrics = strategy.local_update(
+                    state, xs, ys, r, jax.random.fold_in(rk, 1))
+                state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
+                return state, (metrics, {})
+            # faults installed: down/slow clients are frozen — their training
+            # is discarded, they receive nothing, and aggregation runs over
+            # the active cohort (the ClientSampling machinery, mask = active)
+            active = af.real.active()
+            new, metrics = strategy.local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1))
-            state = strategy.aggregate(state, r, jax.random.fold_in(rk, 2))
-            return state, (metrics, {})
+            new = strategy.merge_participation(state, new, active)
+            new = strategy.aggregate_masked(new, r, jax.random.fold_in(rk, 2),
+                                            active)
+            new = strategy.merge_participation(state, new, active)
+            empty = jnp.sum(active) == 0
+            state = jax.tree_util.tree_map(
+                lambda s, n: jnp.where(empty, s, n), state, new)
+            return state, (metrics, {"participation": active})
 
         return body
 
@@ -116,11 +147,27 @@ class FullParticipation(RoundSchedule):
             rk = jax.random.fold_in(phase_key, r)
             xs, ys = ctx.sample_local_batches(
                 train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
-            state, metrics = strategy.sharded_local_update(
+            af = current_faults()
+            if af is None:
+                state, metrics = strategy.sharded_local_update(
+                    state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
+                state = strategy.sharded_aggregate(
+                    state, r, jax.random.fold_in(rk, 2), ctx)
+                return state, (metrics, {})
+            # the realization is replicated (the fault carry is stepped from
+            # the phase key on every slice), so active matches single-device
+            active = af.real.active()
+            local_active = ctx.shard_rows(active)
+            new, metrics = strategy.sharded_local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
-            state = strategy.sharded_aggregate(
-                state, r, jax.random.fold_in(rk, 2), ctx)
-            return state, (metrics, {})
+            new = strategy.merge_participation(state, new, local_active)
+            new = strategy.sharded_aggregate_masked(
+                new, r, jax.random.fold_in(rk, 2), ctx, active, local_active)
+            new = strategy.merge_participation(state, new, local_active)
+            empty = jnp.sum(active) == 0
+            state = jax.tree_util.tree_map(
+                lambda s, n: jnp.where(empty, s, n), state, new)
+            return state, (metrics, {"participation": active})
 
         return body
 
@@ -165,6 +212,10 @@ class ClientSampling(RoundSchedule):
             xs, ys = sample_client_batches(
                 train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
             mask = self.draw_mask(jax.random.fold_in(rk, 3), M)
+            af = current_faults()
+            if af is not None:
+                # a sampled client that is down or slow still can't serve
+                mask = mask * af.real.active()
             new, metrics = strategy.local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1))
             # absent clients' local training is discarded: aggregation sees
@@ -195,6 +246,9 @@ class ClientSampling(RoundSchedule):
             # rows; the aux output stays the full mask so byte accounting and
             # the ledger see exactly the single-device cohorts
             mask = self.draw_mask(jax.random.fold_in(rk, 3), ctx.M)
+            af = current_faults()
+            if af is not None:
+                mask = mask * af.real.active()
             local_mask = ctx.shard_rows(mask)
             new, metrics = strategy.sharded_local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
@@ -238,6 +292,40 @@ class AsyncStaleness(RoundSchedule):
             rk = jax.random.fold_in(phase_key, r)
             xs, ys = sample_client_batches(
                 train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            af = current_faults()
+            if af is not None:
+                # realized staleness: each client's merge weight comes from
+                # the rounds it actually missed ((1+age)^-pow, FedBuff form)
+                # instead of the configured scalar s — slow devices emerge
+                # from the straggler chain
+                active = af.real.active()
+                new, metrics = strategy.local_update(
+                    state, xs, ys, r, jax.random.fold_in(rk, 1))
+                new = strategy.merge_participation(state, new, active)
+                agg = strategy.aggregate_masked(
+                    new, r, jax.random.fold_in(rk, 2), active)
+                w = (1.0 + af.real.age) ** (-self.staleness_pow)
+                if strategy.state_client_stacked(state):
+                    merged = _fault_blend(agg, new, w, w.shape[0],
+                                          jnp.mean(w))
+                    hold = new
+                else:
+                    # server-style state: the aggregate folds into the
+                    # previous global model at the mean realized discount
+                    wbar = jnp.mean(w)
+                    merged = jax.tree_util.tree_map(
+                        lambda a, s: (wbar * a + (1.0 - wbar) * s)
+                        .astype(s.dtype), agg, state)
+                    hold = state
+                if period > 1:
+                    is_merge = jnp.equal(r % period, period - 1)
+                    merged = jax.tree_util.tree_map(
+                        lambda m, n: jnp.where(is_merge, m, n), merged, hold)
+                merged = strategy.merge_participation(state, merged, active)
+                empty = jnp.sum(active) == 0
+                state = jax.tree_util.tree_map(
+                    lambda s, n: jnp.where(empty, s, n), state, merged)
+                return state, (metrics, {"participation": active})
             state, metrics = strategy.local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1))
             if period == 1:   # synchronous: identical to FullParticipation
@@ -264,6 +352,37 @@ class AsyncStaleness(RoundSchedule):
             rk = jax.random.fold_in(phase_key, r)
             xs, ys = ctx.sample_local_batches(
                 train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            af = current_faults()
+            if af is not None:
+                active = af.real.active()
+                local_active = ctx.shard_rows(active)
+                new, metrics = strategy.sharded_local_update(
+                    state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
+                new = strategy.merge_participation(state, new, local_active)
+                agg = strategy.sharded_aggregate_masked(
+                    new, r, jax.random.fold_in(rk, 2), ctx, active,
+                    local_active)
+                w = (1.0 + af.real.age) ** (-self.staleness_pow)
+                if strategy.state_client_stacked(state):
+                    merged = _fault_blend(agg, new, ctx.shard_rows(w), ctx.m,
+                                          jnp.mean(w))
+                    hold = new
+                else:
+                    wbar = jnp.mean(w)
+                    merged = jax.tree_util.tree_map(
+                        lambda a, s: (wbar * a + (1.0 - wbar) * s)
+                        .astype(s.dtype), agg, state)
+                    hold = state
+                if period > 1:
+                    is_merge = jnp.equal(r % period, period - 1)
+                    merged = jax.tree_util.tree_map(
+                        lambda m, n: jnp.where(is_merge, m, n), merged, hold)
+                merged = strategy.merge_participation(state, merged,
+                                                      local_active)
+                empty = jnp.sum(active) == 0
+                state = jax.tree_util.tree_map(
+                    lambda s, n: jnp.where(empty, s, n), state, merged)
+                return state, (metrics, {"participation": active})
             state, metrics = strategy.sharded_local_update(
                 state, xs, ys, r, jax.random.fold_in(rk, 1), ctx)
             if period == 1:   # synchronous: identical to FullParticipation

@@ -190,14 +190,24 @@ class ShardedEngine(Engine):
             return fn
         ctx = ClientShardCtx(self.mesh, self.client_axis, data.num_clients)
         body = self.schedule.sharded_round_body(self.strategy, batch_size, ctx)
+        faulted = self.faults is not None
+        if faulted:
+            from repro.resilience import wrap_round_body
+            body = wrap_round_body(body, self.faults)
         mesh, axis = self.mesh, self.client_axis
         stacked_state = self.strategy.state_client_stacked
         repl = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
 
         def run(state, phase_key, train_x, train_y, start, rt):
             CHUNK_STATS["traces"] += 1
-            sspec = (client_specs(state, ctx.M_pad, axis)
-                     if stacked_state(state) else repl(state))
+            # under faults the carry is (strategy state, FaultState); the
+            # fault chains are replicated — every slice steps the identical
+            # Markov transition from the replicated phase key, which is what
+            # makes sharded ≡ single-device hold under every fault regime
+            st = state[0] if faulted else state
+            s0 = (client_specs(st, ctx.M_pad, axis)
+                  if stacked_state(st) else repl(st))
+            sspec = (s0, repl(state[1])) if faulted else s0
 
             def sharded(state, phase_key, tx, ty, start, rt):
                 with runtime_params(rt):

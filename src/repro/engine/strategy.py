@@ -241,8 +241,14 @@ class Strategy:
         nothing extra."""
         if self._mix_plan is None:
             return stacked_tree
+        from repro.resilience import current_faults
         from repro.topology.mixing import mix_stacked
-        return mix_stacked(stacked_tree, self._mix_plan, r, key)
+        af = current_faults()
+        # a correlated fault process supersedes the plan's i.i.d. rates: the
+        # realized keep matrix (bursty links, outages, partitions) replaces
+        # the per-round memoryless draw
+        keep = None if af is None else af.real.keep
+        return mix_stacked(stacked_tree, self._mix_plan, r, key, keep=keep)
 
     def mix_sharded(self, stacked_tree, r, key, ctx):
         """Sharded twin of ``mix`` (inside the shard_map region): ppermute
@@ -250,8 +256,12 @@ class Strategy:
         every edge is shard-resident, gather→mix→re-shard otherwise."""
         if self._mix_plan is None:
             return stacked_tree
+        from repro.resilience import current_faults
         from repro.topology.mixing import mix_stacked_sharded
-        return mix_stacked_sharded(stacked_tree, self._mix_plan, r, key, ctx)
+        af = current_faults()
+        keep = None if af is None else af.real.keep
+        return mix_stacked_sharded(stacked_tree, self._mix_plan, r, key, ctx,
+                                   keep=keep)
 
     # ------------------------------------------------------- sharded engine
     # These hooks run inside a shard_map region over the client mesh axis
@@ -350,7 +360,7 @@ class Strategy:
 
     # ------------------------------------------------------- optional hooks
     def log_communication(self, net, state, r: int, mask=None,
-                          phase_key=None) -> None:
+                          phase_key=None, faults=None) -> None:
         """Record the round's messages on a P2PNetwork (host-side, called by
         the engine at eval boundaries for each elapsed round). ``mask`` is the
         round's (M,) participation mask under a sampling schedule (None for
@@ -358,7 +368,9 @@ class Strategy:
         ``phase_key`` is the engine's phase key: strategies with a faulty
         topology re-derive the round's exact link-fault realization from it
         (``repro.topology.faults.host_fault_masks``) so dropped links also
-        contribute zero bytes."""
+        contribute zero bytes. ``faults`` is the round's replayed
+        ``repro.resilience.HostFaults`` when the engine runs a correlated
+        fault process (it supersedes the topology's i.i.d. rates)."""
 
     def set_sigma(self, sigma: float) -> None:
         """Engine hook for target-ε calibration (``Engine.fit(target_epsilon=

@@ -1,0 +1,15 @@
+from repro.resilience.processes import (ActiveFaults, FaultModel,
+                                        FaultProcess, FaultRealization,
+                                        FaultState, HostFaults,
+                                        RESILIENCE_STREAM, active_faults,
+                                        current_faults, fault_state_at,
+                                        gilbert_elliott_rates,
+                                        host_realizations, make_fault_process,
+                                        wrap_round_body)
+
+__all__ = [
+    "ActiveFaults", "FaultModel", "FaultProcess", "FaultRealization",
+    "FaultState", "HostFaults", "RESILIENCE_STREAM", "active_faults",
+    "current_faults", "fault_state_at", "gilbert_elliott_rates",
+    "host_realizations", "make_fault_process", "wrap_round_body",
+]

@@ -1,0 +1,350 @@
+"""Stateful (Markov) fault processes — the correlated failure regimes the
+i.i.d. draws in ``topology/faults.py`` cannot express.
+
+PR 5's fault injection redraws every link/node fate independently each round;
+real edge deployments fail in *bursts*: a congested link stays congested, a
+crashed device stays down until repaired, a partition cuts the network for a
+stretch of rounds, a thermally-throttled phone lags for minutes.  This module
+models those as per-edge / per-node / global two-state Markov chains whose
+state is carried through the engine's ``lax.scan`` chunk:
+
+  * **links** — Gilbert–Elliott: each undirected edge is good/bad; good→bad
+    with ``link_fail``, bad→good with ``link_repair`` (mean burst length
+    ``1/link_repair`` rounds).  ``gilbert_elliott_rates`` converts the
+    (stationary drop rate, mean burst length) parameterization the sweeps
+    use into the two transition rates.
+  * **nodes** — outage/repair chain with geometric dwell times
+    (``node_fail`` / ``node_repair``); a down node's links all drop and its
+    mixing row degenerates to the identity, exactly as PR-5 churn.
+  * **partition** — with ``partition_prob`` a balanced bisection of the
+    clients is sampled and every cross-cut link drops until the partition
+    heals (geometric duration, ``partition_repair``).
+  * **stragglers** — per-client slow/fast chain (``slow_enter`` /
+    ``slow_exit``).  A slow client is *frozen*: its local update is
+    discarded and it receives nothing; its ``age`` (rounds since it last
+    participated) feeds ``AsyncStaleness``'s per-client staleness discount,
+    so slow devices emerge from the fault model instead of a fixed ``s``.
+
+Each round the process steps on ``fold_in(fold_in(phase_key, r),
+RESILIENCE_STREAM)`` — a stream disjoint from the batch/local/aggregate/
+cohort streams 0–3 and from ``topology.faults.FAULT_STREAM`` — so installing
+a process never perturbs any other draw, and eager host-side replay
+(``host_realizations`` / ``fault_state_at``) re-derives the exact traced
+realizations for byte accounting and crash-resume fast-forward: jax's PRNG
+is bit-identical eager and traced.
+
+The realized ``keep`` matrix stays symmetric with ``diag = up``, the same
+contract as ``draw_fault_masks`` — the mixing step's diagonal-fold therefore
+keeps every realized gossip matrix doubly stochastic under correlated masks
+too.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Tuple
+
+RESILIENCE_STREAM = 0x71
+
+
+# ---------------------------------------------------------------------------
+# model + state
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Transition rates (per round) of the correlated fault chains. A rate of
+    zero statically removes that chain's ops from the trace."""
+    link_fail: float = 0.0        # Gilbert–Elliott good→bad, per edge
+    link_repair: float = 1.0      # bad→good (mean burst = 1/link_repair)
+    node_fail: float = 0.0        # node up→down
+    node_repair: float = 1.0      # down→up (mean outage = 1/node_repair)
+    partition_prob: float = 0.0   # chance a partition event starts
+    partition_repair: float = 0.5  # chance an active partition heals
+    slow_enter: float = 0.0       # client fast→slow (straggler chain)
+    slow_exit: float = 1.0        # slow→fast
+    quorum: float = 0.0           # P4: min up-fraction for group aggregation
+
+    @property
+    def enabled(self) -> bool:
+        return (self.link_fail > 0 or self.node_fail > 0
+                or self.partition_prob > 0 or self.slow_enter > 0)
+
+
+def gilbert_elliott_rates(drop: float, burst_len: float) -> Tuple[float, float]:
+    """(stationary drop probability, mean burst length in rounds) → the
+    (link_fail, link_repair) rates realizing them: repair = 1/L and
+    fail = drop·repair/(1-drop), from the chain's stationary distribution
+    π_bad = fail/(fail+repair)."""
+    if drop <= 0.0:
+        return 0.0, 1.0
+    if not 0.0 < drop < 1.0 or burst_len < 1.0:
+        raise ValueError(f"need 0<drop<1 and burst_len>=1, got {drop}, {burst_len}")
+    repair = 1.0 / burst_len
+    fail = drop * repair / (1.0 - drop)
+    return min(fail, 1.0), repair
+
+
+class FaultState(NamedTuple):
+    """The scanned carry: one entry per chain, all float32 indicators."""
+    link_bad: object    # (M, M) symmetric, diag 0 — edge currently bursty
+    down: object        # (M,) node currently in outage
+    part_active: object  # () a partition is currently cutting the graph
+    part_side: object   # (M,) bisection side of the active partition
+    slow: object        # (M,) client currently a straggler
+    age: object         # (M,) rounds since the client last participated
+
+
+class FaultRealization(NamedTuple):
+    """What one round actually sees, derived from the post-transition state."""
+    keep: object        # (M, M) effective edge-keep (symmetric, diag = up)
+    up: object          # (M,) node not in outage
+    slow: object        # (M,) straggler indicator
+    age: object         # (M,) rounds the client missed entering this round
+
+    def active(self):
+        """Participating this round: up and not a straggler."""
+        return self.up * (1.0 - self.slow)
+
+
+@dataclass(frozen=True)
+class FaultProcess:
+    """A fault model bound to a client count — hashable, so it can live in the
+    compiled-chunk cache key, and stateless, so host replay and the traced
+    scan share one ``step``."""
+    model: FaultModel
+    M: int
+
+    def fingerprint(self) -> Tuple:
+        m = self.model
+        return ("faults", self.M, m.link_fail, m.link_repair, m.node_fail,
+                m.node_repair, m.partition_prob, m.partition_repair,
+                m.slow_enter, m.slow_exit, m.quorum)
+
+    def init_state(self) -> FaultState:
+        import jax.numpy as jnp
+        M = self.M
+        z = lambda shape: jnp.zeros(shape, jnp.float32)
+        return FaultState(z((M, M)), z((M,)), z(()), z((M,)), z((M,)), z((M,)))
+
+    def round_key(self, phase_key, r):
+        import jax
+        return jax.random.fold_in(jax.random.fold_in(phase_key, r),
+                                  RESILIENCE_STREAM)
+
+    def step(self, state: FaultState, r, key):
+        """One Markov transition + the round's realization. Ordinary jax:
+        eager on the host (replay) and traced in the chunk — bit-identical."""
+        import jax
+        import jax.numpy as jnp
+        m, M = self.model, self.M
+        kl, kn, kp, kside, ks = jax.random.split(key, 5)
+        f32 = jnp.float32
+
+        # links: one coupled uniform per undirected edge drives both branches
+        if m.link_fail > 0.0:
+            u = jax.random.uniform(kl, (M, M))
+            tri = jnp.triu(u, 1)
+            u_sym = tri + tri.T
+            bad = state.link_bad
+            stay = (u_sym >= m.link_repair).astype(f32)
+            enter = (u_sym < m.link_fail).astype(f32)
+            link_bad = bad * stay + (1.0 - bad) * enter
+            link_bad = jnp.where(jnp.eye(M, dtype=bool), 0.0, link_bad)
+        else:
+            link_bad = state.link_bad
+
+        # node outage/repair chain
+        if m.node_fail > 0.0:
+            u = jax.random.uniform(kn, (M,))
+            down = state.down
+            down = (down * (u >= m.node_repair).astype(f32)
+                    + (1.0 - down) * (u < m.node_fail).astype(f32))
+        else:
+            down = state.down
+
+        # partition: scalar on/off chain + a balanced bisection sampled at
+        # every onset (the argsort trick draws exactly M//2 per side)
+        if m.partition_prob > 0.0:
+            u = jax.random.uniform(kp, ())
+            act = state.part_active
+            new_act = jnp.where(act > 0,
+                                (u >= m.partition_repair).astype(f32),
+                                (u < m.partition_prob).astype(f32))
+            su = jax.random.uniform(kside, (M,))
+            fresh = (jnp.argsort(jnp.argsort(su)) < M // 2).astype(f32)
+            starts = (act <= 0) & (new_act > 0)
+            side = jnp.where(starts, fresh, state.part_side)
+        else:
+            new_act, side = state.part_active, state.part_side
+
+        # straggler chain
+        if m.slow_enter > 0.0:
+            u = jax.random.uniform(ks, (M,))
+            slow = state.slow
+            slow = (slow * (u >= m.slow_exit).astype(f32)
+                    + (1.0 - slow) * (u < m.slow_enter).astype(f32))
+        else:
+            slow = state.slow
+
+        up = 1.0 - down
+        keep = 1.0 - link_bad            # diag stays 1 pre-outage
+        if m.partition_prob > 0.0:
+            cross = (side[:, None] != side[None, :]).astype(f32)
+            keep = keep * (1.0 - new_act * cross)
+        keep = keep * up[:, None] * up[None, :]   # diag = up, as PR-5 churn
+
+        # the realization carries the age *entering* the round — a client
+        # recovering after k missed rounds contributes a k-stale update, so
+        # its AsyncStaleness merge weight is (1+k)^-pow even though the state
+        # counter resets now that it participates again
+        active = up * (1.0 - slow)
+        age_next = jnp.where(active > 0, 0.0, state.age + 1.0)
+        new_state = FaultState(link_bad, down, new_act, side, slow, age_next)
+        return new_state, FaultRealization(keep, up, slow, state.age)
+
+
+def make_fault_process(cfg, M: int):
+    """Build a process from a ``config.FaultConfig`` (or any object with the
+    same rate attributes); ``None`` when every chain is disabled."""
+    model = FaultModel(
+        link_fail=cfg.link_fail, link_repair=cfg.link_repair,
+        node_fail=cfg.node_fail, node_repair=cfg.node_repair,
+        partition_prob=cfg.partition_prob,
+        partition_repair=cfg.partition_repair,
+        slow_enter=cfg.slow_enter, slow_exit=cfg.slow_exit,
+        quorum=cfg.quorum)
+    if not model.enabled:
+        return None
+    return FaultProcess(model=model, M=int(M))
+
+
+# ---------------------------------------------------------------------------
+# trace-time context: how strategies/schedules see the round's realization
+# without a hook-signature change (same mechanism as runtime_params)
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@dataclass
+class ActiveFaults:
+    """The traced realization plus the static model (quorum etc.) — what
+    ``current_faults`` hands to schedule bodies and strategy hooks during the
+    chunk trace."""
+    real: FaultRealization
+    model: FaultModel
+
+
+@contextmanager
+def active_faults(af: ActiveFaults):
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = af
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def current_faults():
+    return getattr(_CTX, "value", None)
+
+
+def wrap_round_body(body, process: FaultProcess):
+    """Engine glue: step the process on the round's resilience stream, expose
+    the realization to the inner body via the context, and thread the
+    ``FaultState`` through the scan carry. Works unchanged for the sharded
+    body — the carry is replicated, the step uses no collectives, and every
+    slice realizes the identical masks."""
+    import jax.numpy as jnp
+
+    def wrapped(carry, r, phase_key, *data):
+        state, fstate = carry
+        fstate, real = process.step(fstate, r, process.round_key(phase_key, r))
+        with active_faults(ActiveFaults(real, process.model)):
+            state, (metrics, aux) = body(state, r, phase_key, *data)
+        aux = dict(aux)
+        aux.setdefault("participation", real.active())
+        aux["fault_up"] = jnp.mean(real.up)
+        aux["fault_slow"] = jnp.mean(real.slow)
+        aux["fault_keep"] = jnp.mean(real.keep)
+        return (state, fstate), (metrics, aux)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# host-side replay: byte accounting + crash-resume fast-forward
+# ---------------------------------------------------------------------------
+
+class HostFaults:
+    """Numpy view of one round's realization for host-side consumers
+    (``Strategy.log_communication``), plus the static model for failover /
+    quorum re-derivation."""
+
+    def __init__(self, real: FaultRealization, model: FaultModel):
+        import numpy as np
+        self.keep = np.asarray(real.keep)
+        self.up = np.asarray(real.up)
+        self.slow = np.asarray(real.slow)
+        self.age = np.asarray(real.age)
+        self.model = model
+
+    @property
+    def active(self):
+        return self.up * (1.0 - self.slow)
+
+
+def _key_bytes(key) -> bytes:
+    import jax
+    import numpy as np
+    try:
+        data = jax.random.key_data(key)
+    except Exception:
+        data = key
+    return np.asarray(data).tobytes()
+
+
+# (process, phase-key bytes, origin) → incremental replay: the accounting
+# calls arrive in ascending round order, so the chain advances monotonically
+# and each realization is derived exactly once per phase.
+_REPLAY: Dict[Tuple, Dict] = {}
+_REPLAY_MAX = 32
+
+
+def _replay_entry(process: FaultProcess, phase_key, origin: int, upto: int):
+    cache_key = (process, _key_bytes(phase_key), origin)
+    ent = _REPLAY.get(cache_key)
+    if ent is None:
+        ent = {"round": origin, "state": process.init_state(), "reals": []}
+        _REPLAY[cache_key] = ent
+        while len(_REPLAY) > _REPLAY_MAX:
+            _REPLAY.pop(next(iter(_REPLAY)))
+    while ent["round"] < upto:
+        r = ent["round"]
+        ent["state"], real = process.step(
+            ent["state"], r, process.round_key(phase_key, r))
+        ent["reals"].append(HostFaults(real, process.model))
+        ent["round"] += 1
+    return ent
+
+
+def host_realizations(process: FaultProcess, phase_key, origin: int,
+                      start: int, stop: int):
+    """The exact realizations the traced rounds [start, stop) used, replayed
+    eagerly from the phase origin — the correlated-process twin of
+    ``topology.faults.host_fault_masks``."""
+    ent = _replay_entry(process, phase_key, origin, stop)
+    return ent["reals"][start - origin:stop - origin]
+
+
+def fault_state_at(process: FaultProcess, phase_key, origin: int,
+                   round_: int) -> FaultState:
+    """The chain's state entering ``round_``, replayed from the phase origin —
+    how a resumed run rejoins the fault trajectory bit-exactly without
+    persisting fault state in checkpoints."""
+    state = process.init_state()
+    for r in range(origin, round_):
+        state, _ = process.step(state, r, process.round_key(phase_key, r))
+    return state

@@ -191,33 +191,39 @@ def _round_slice(arr: np.ndarray, r, period: int):
                                         0, keepdims=False)
 
 
-def _fault_adjusted_rows(plan: MixPlan, nbr, r, key):
+def _fault_adjusted_rows(plan: MixPlan, nbr, r, key, keep=None):
     """(self_w, nbr_w) rows for round r with this round's fault realization
     folded in: dropped slots zeroed, their mass moved to the diagonal — the
-    realized matrix stays symmetric doubly stochastic."""
+    realized matrix stays symmetric doubly stochastic. An explicit ``keep``
+    (a correlated process realization from ``repro.resilience``) supersedes
+    the plan's i.i.d. draw."""
     import jax.numpy as jnp
     from repro.topology.faults import draw_fault_masks
     w_row = _round_slice(plan.nbr_w_np, r, plan.period)
     s_row = _round_slice(plan.self_w_np, r, plan.period)
-    if not plan.faulty:
-        return s_row, w_row
-    keep, _up = draw_fault_masks(key, plan.M, plan.drop_prob, plan.churn_prob)
+    if keep is None:
+        if not plan.faulty:
+            return s_row, w_row
+        keep, _up = draw_fault_masks(key, plan.M, plan.drop_prob,
+                                     plan.churn_prob)
     keep_slots = keep[jnp.arange(plan.M)[:, None], nbr]
     s_row = s_row + jnp.sum(w_row * (1.0 - keep_slots), axis=1)
     return s_row, w_row * keep_slots
 
 
-def mix_stacked(tree, plan: MixPlan, r=0, key=None):
+def mix_stacked(tree, plan: MixPlan, r=0, key=None, keep=None):
     """One gossip round on a stacked (M, ...) pytree: t ← W_r t, with W_r
     the round's (fault-realized) mixing matrix, evaluated as a sparse
     neighbor gather. ``r`` and ``key`` may be traced (the engine passes the
-    round index and the local-update key)."""
+    round index and the local-update key). ``keep`` is an optional external
+    (M, M) edge realization (correlated fault process) that forces the
+    general fault-folding path."""
     import jax
     import jax.numpy as jnp
     if plan.degree == 0 or plan.M <= 1:
         return tree
 
-    if plan.ring and not plan.faulty:
+    if plan.ring and not plan.faulty and keep is None:
         # the pre-refactor ``_ring_mix`` lowering, verbatim — roll-based
         # neighbor reads keep the XLA fusion (and therefore the float
         # rounding) bit-identical to the historical DP-DSGT trajectories
@@ -231,7 +237,7 @@ def mix_stacked(tree, plan: MixPlan, r=0, key=None):
 
     nbr = _round_slice(plan.nbr_np, r, plan.period)
 
-    if plan.uniform is not None and not plan.faulty:
+    if plan.uniform is not None and not plan.faulty and keep is None:
         s, w = plan.uniform
 
         def mix_u(t):
@@ -242,7 +248,7 @@ def mix_stacked(tree, plan: MixPlan, r=0, key=None):
 
         return jax.tree_util.tree_map(mix_u, tree)
 
-    s_row, w_row = _fault_adjusted_rows(plan, nbr, r, key)
+    s_row, w_row = _fault_adjusted_rows(plan, nbr, r, key, keep=keep)
 
     def mix_g(t):
         ex = (-1,) + (1,) * (t.ndim - 1)
@@ -299,7 +305,7 @@ def _pad_rows_np(arr: np.ndarray, target: int, fill):
     return np.concatenate([arr, pad], axis=0)
 
 
-def _local_mix(tree, plan: MixPlan, r, key, ctx):
+def _local_mix(tree, plan: MixPlan, r, key, ctx, keep=None):
     """Slice-local gather mix for shard-resident topologies: global neighbor
     indices are localized against the shard offset; padded rows self-loop
     with zero weight. Same per-row arithmetic as the single-device paths."""
@@ -312,7 +318,7 @@ def _local_mix(tree, plan: MixPlan, r, key, ctx):
     local_nbr = (ctx.shard_rows(jnp.asarray(nbr_pad))
                  - ctx.shard_offset())
 
-    if plan.uniform is not None and not plan.faulty:
+    if plan.uniform is not None and not plan.faulty and keep is None:
         s, w = plan.uniform
 
         def mix_u(t):
@@ -324,7 +330,7 @@ def _local_mix(tree, plan: MixPlan, r, key, ctx):
         return jax.tree_util.tree_map(mix_u, tree)
 
     s_full, w_full = _fault_adjusted_rows(plan, jnp.asarray(plan.nbr_np[0]),
-                                          r, key)
+                                          r, key, keep=keep)
     s_row = ctx.shard_rows(jnp.concatenate(
         [s_full, jnp.ones((ctx.M_pad - M,), s_full.dtype)]) if ctx.M_pad != M
         else s_full)
@@ -342,7 +348,7 @@ def _local_mix(tree, plan: MixPlan, r, key, ctx):
     return jax.tree_util.tree_map(mix_g, tree)
 
 
-def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx):
+def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx, keep=None):
     """Sharded twin of ``mix_stacked`` (call inside the shard_map region):
 
       ring, shard-aligned, fault-free → ppermute halo exchange;
@@ -352,13 +358,15 @@ def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx):
                                          step by construction.
 
     Fault draws are replicated (every shard draws the identical (M, M) keep
-    matrix from the same key) so realized topologies agree across layouts.
+    matrix from the same key) so realized topologies agree across layouts;
+    an external correlated ``keep`` realization is replicated by the same
+    argument (the fault carry is stepped identically on every slice).
     """
     if plan.degree == 0 or plan.M <= 1:
         return tree
-    if plan.ring and not plan.faulty and ctx.M_pad == ctx.M:
+    if plan.ring and not plan.faulty and keep is None and ctx.M_pad == ctx.M:
         return _halo_ring_mix(tree, plan, ctx)
     if edges_shard_resident(plan, ctx):
-        return _local_mix(tree, plan, r, key, ctx)
+        return _local_mix(tree, plan, r, key, ctx, keep=keep)
     full = ctx.gather(tree)
-    return ctx.scatter_like(mix_stacked(full, plan, r, key), full)
+    return ctx.scatter_like(mix_stacked(full, plan, r, key, keep=keep), full)

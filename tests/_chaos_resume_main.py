@@ -1,0 +1,80 @@
+"""Crash-safety chaos harness, executed as a subprocess by
+``tests/test_resilience.py``.
+
+Usage: ``python _chaos_resume_main.py <ckpt_dir> <mode> [faulted]``
+
+  baseline — uninterrupted fit over the whole horizon, print the record
+  crash    — same fit, but every checkpoint save is followed by a short
+             sleep so the parent can observe progress and SIGKILL the
+             process mid-training (this mode never prints: it dies)
+  resume   — ``fit(resume=True)`` from whatever the killed run left behind
+
+``faulted`` adds a correlated fault process, so the chaos tier also covers
+the fault-chain fast-forward on resume. Prints ONE JSON object with the
+History lists and a SHA-256 over the final state's leaves — the parent
+asserts resumed ≡ baseline bit-exactly.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+import time
+
+ROUNDS, EVAL_EVERY, SEED = 30, 3, 0
+
+
+def main() -> None:
+    ckpt_dir, mode = sys.argv[1], sys.argv[2]
+    faulted = len(sys.argv) > 3 and sys.argv[3] == "faulted"
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.baselines.local import LocalStrategy
+    from repro.engine import Engine, FederatedData
+    from repro.resilience import FaultModel, make_fault_process
+
+    if mode == "crash":
+        # slow the saves down so the parent reliably lands its SIGKILL
+        # between two checkpoints (mid-chunk), never changing what is saved
+        import repro.checkpoint as ck
+        orig = ck.save_checkpoint
+
+        def slow_save(*args, **kwargs):
+            out = orig(*args, **kwargs)
+            time.sleep(0.4)
+            return out
+
+        ck.save_checkpoint = slow_save
+
+    rng = np.random.default_rng(SEED)
+    M, feat, classes, n = 6, 12, 3, 32
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, n))
+    xs = protos[ys] + rng.normal(size=(M, n, feat)).astype(np.float32) * 0.4
+    data = FederatedData(xs, ys.astype(np.int32), jnp.asarray(xs),
+                         jnp.asarray(ys.astype(np.int32)))
+
+    faults = None
+    if faulted:
+        fm = FaultModel(link_fail=0.2, link_repair=0.5, node_fail=0.15,
+                        node_repair=0.5, slow_enter=0.2, slow_exit=0.5)
+        faults = make_fault_process(fm, M)
+
+    strategy = LocalStrategy(feat_dim=feat, num_classes=classes, lr=0.5)
+    engine = Engine(strategy, eval_every=EVAL_EVERY, checkpoint_dir=ckpt_dir,
+                    faults=faults)
+    state, hist = engine.fit(data, rounds=ROUNDS, key=jax.random.PRNGKey(SEED),
+                             batch_size=8, resume=(mode == "resume"))
+
+    sha = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(state):
+        sha.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    print(json.dumps({"rounds": hist.rounds, "accuracy": hist.accuracy,
+                      "metrics": hist.metrics, "state_sha": sha.hexdigest()}))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,12 +62,14 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
 
     def compare(name, mk_strategy, schedule=None, data=data8, rounds=8,
-                batch=8, mesh=mesh8):
+                batch=8, mesh=mesh8, faults=None):
         mk_sched = schedule if schedule is not None else (lambda: None)
-        st1, h1 = Engine(mk_strategy(), eval_every=3, schedule=mk_sched()).fit(
+        mk_faults = faults if faults is not None else (lambda: None)
+        st1, h1 = Engine(mk_strategy(), eval_every=3, schedule=mk_sched(),
+                         faults=mk_faults()).fit(
             data, rounds=rounds, key=key, batch_size=batch)
         st2, h2 = ShardedEngine(mk_strategy(), eval_every=3, mesh=mesh,
-                                schedule=mk_sched()).fit(
+                                schedule=mk_sched(), faults=mk_faults()).fit(
             data, rounds=rounds, key=key, batch_size=batch)
         results[name] = {
             "rounds_equal": h1.rounds == h2.rounds,
@@ -235,6 +237,44 @@ def main() -> None:
     compare("p4_faulty_resident", mk_p4(resident, p4_fault_topo), mesh=mesh2)
     compare("p4_faulty_gather", mk_p4(spanning, topo_lib.group_clustered(
         [list(g) for g in spanning], M).with_faults(0.3, 0.1)))
+
+    # -------- resilience: correlated fault regimes, sharded ≡ single --------
+    # the FaultState carry is replicated across slices (every shard steps the
+    # identical Markov transition from the replicated phase key), so every
+    # regime must realize the same masks on both layouts
+    from repro.resilience import (FaultModel, gilbert_elliott_rates,
+                                  make_fault_process)
+
+    ge_fail, ge_repair = gilbert_elliott_rates(0.3, 3.0)
+    regimes = {
+        "burst": FaultModel(link_fail=ge_fail, link_repair=ge_repair),
+        "churn": FaultModel(node_fail=0.25, node_repair=0.4),
+        "partition": FaultModel(partition_prob=0.25, partition_repair=0.3),
+    }
+    for rname, fm in regimes.items():
+        compare(f"dsgt_fault_{rname}", lambda: DPDSGTStrategy(
+            feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+            topology=expander),
+            faults=lambda: make_fault_process(fm, M))
+
+    straggler = FaultModel(slow_enter=0.3, slow_exit=0.5)
+    compare("fedavg_fault_straggler", lambda: FedAvgStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.5, clip=1.0, sigma=0.4,
+        reduce="gather"),
+        schedule=lambda: AsyncStaleness(staleness=1),
+        faults=lambda: make_fault_process(straggler, M))
+    compare("p4_fault_straggler", mk_p4(spanning),
+            schedule=lambda: AsyncStaleness(staleness=1),
+            faults=lambda: make_fault_process(straggler, M))
+
+    # failover under combined faults + quorum, on the pod-resident layout
+    # (the sliced reach mask) and the gather layout
+    failover_fm = FaultModel(link_fail=ge_fail, link_repair=ge_repair,
+                             node_fail=0.3, node_repair=0.4, quorum=0.5)
+    compare("p4_fault_failover_resident", mk_p4(resident), mesh=mesh2,
+            faults=lambda: make_fault_process(failover_fm, M))
+    compare("p4_fault_failover_gather", mk_p4(spanning),
+            faults=lambda: make_fault_process(failover_fm, M))
 
     # ---------------- P4 end-to-end: bootstrap -> grouping -> co-train ------
     protos2 = rng.normal(size=(2, 4, 20)).astype(np.float32) * 2

@@ -315,5 +315,8 @@ def test_engine_checkpoint_resume(toy, key, tmp_path):
                      eval_every=5, checkpoint_dir=str(tmp_path))
     state2, hist2 = resumed.fit(data, rounds=20, key=key, batch_size=8,
                                 resume=True)
-    assert hist2.rounds == [10, 15, 19]  # continued, not restarted
+    # the sidecar restores the killed run's record, so the resumed History is
+    # the full trajectory: restored prefix + continued rounds
+    assert hist2.rounds == [0, 5, 9, 10, 15, 19]
+    assert hist2.accuracy[:3] == hist.accuracy  # restored bit-exact
     assert hist2.accuracy[-1] > 0.7

@@ -1,0 +1,420 @@
+"""Resilience subsystem tier: correlated fault chains, straggler freezing,
+aggregator failover, crash-safe checkpoints, and bit-exact auto-resume.
+
+The SIGKILL chaos scenario (kill a training subprocess mid-chunk, resume,
+assert the History is bit-exact with an uninterrupted run) is marked slow;
+everything else runs in tier-1."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.local import LocalStrategy
+from repro.checkpoint import (CheckpointError, latest_step,
+                              load_checkpoint_metadata, restore_checkpoint,
+                              save_checkpoint, verify_checkpoint)
+from repro.engine import Engine, FederatedData
+from repro.resilience import (FaultModel, FaultProcess, FaultRealization,
+                              fault_state_at, gilbert_elliott_rates,
+                              host_realizations, make_fault_process)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    M, feat, classes, n = 6, 12, 3, 32
+    protos = rng.normal(size=(classes, feat)).astype(np.float32) * 3
+    ys = rng.integers(0, classes, size=(M, n))
+    xs = protos[ys] + rng.normal(size=(M, n, feat)).astype(np.float32) * 0.4
+    return FederatedData(xs, ys.astype(np.int32), jnp.asarray(xs),
+                         jnp.asarray(ys.astype(np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# fault chains: invariants of the stepped realizations
+# ---------------------------------------------------------------------------
+
+def test_disabled_model_builds_no_process():
+    assert not FaultModel().enabled
+    assert make_fault_process(FaultModel(), 8) is None
+    assert make_fault_process(FaultModel(link_fail=0.1), 8) is not None
+
+
+def test_gilbert_elliott_rates_realize_the_parameterization():
+    fail, repair = gilbert_elliott_rates(0.3, 4.0)
+    assert repair == pytest.approx(1 / 4.0)           # mean burst length
+    assert fail / (fail + repair) == pytest.approx(0.3)  # stationary drop
+    assert gilbert_elliott_rates(0.0, 10.0) == (0.0, 1.0)
+    with pytest.raises(ValueError):
+        gilbert_elliott_rates(1.5, 4.0)
+    with pytest.raises(ValueError):
+        gilbert_elliott_rates(0.3, 0.5)
+
+
+def _run_chain(model, M, rounds, key):
+    proc = FaultProcess(model, M)
+    state, reals = proc.init_state(), []
+    for r in range(rounds):
+        state, real = proc.step(state, r, proc.round_key(key, r))
+        reals.append(real)
+    return reals
+
+
+def test_realized_keep_symmetric_diag_up(key):
+    model = FaultModel(link_fail=0.3, link_repair=0.4, node_fail=0.25,
+                       node_repair=0.5, partition_prob=0.3,
+                       partition_repair=0.4, slow_enter=0.2, slow_exit=0.5)
+    for real in _run_chain(model, 8, 12, key):
+        keep = np.asarray(real.keep)
+        up = np.asarray(real.up)
+        np.testing.assert_array_equal(keep, keep.T)
+        np.testing.assert_array_equal(np.diag(keep), up)
+        assert set(np.unique(keep)) <= {0.0, 1.0}
+        assert set(np.unique(up)) <= {0.0, 1.0}
+        # a down endpoint kills every incident edge
+        assert np.all(keep <= up[:, None]) and np.all(keep <= up[None, :])
+
+
+def test_bursty_links_are_absorbing_without_repair(key):
+    """link_repair=0: a bad edge never heals — the dropped set can only grow
+    (the extreme of burstiness; i.i.d. redraws cannot express this)."""
+    model = FaultModel(link_fail=0.3, link_repair=0.0)
+    prev = None
+    for real in _run_chain(model, 8, 10, key):
+        dropped = np.asarray(real.keep) == 0
+        if prev is not None:
+            assert np.all(dropped | ~prev)   # once dropped, stays dropped
+        prev = dropped
+    assert prev.any()
+
+
+def test_partition_cuts_exactly_the_bisection(key):
+    model = FaultModel(partition_prob=0.5, partition_repair=0.3)
+    M = 8
+    saw_active = False
+    for real in _run_chain(model, M, 16, key):
+        keep = np.asarray(real.keep)
+        off = ~np.eye(M, dtype=bool)
+        if (keep[off] == 0).any():
+            saw_active = True
+            # dropped pairs form a complete bipartite cut of a balanced
+            # bisection: side(i) differs exactly where keep is 0
+            side = keep[0] == 0          # nodes cut from node 0
+            side[0] = False
+            assert side.sum() == M // 2
+            expect = (side[:, None] != side[None, :]) & off
+            np.testing.assert_array_equal(keep == 0, expect)
+        else:
+            np.testing.assert_array_equal(keep, np.ones((M, M)))
+    assert saw_active
+
+
+def test_straggler_age_counts_missed_rounds(key):
+    """slow_enter=1, slow_exit=0: everyone is a straggler from round 0 on;
+    the realization's age is the PRE-reset count of missed rounds, so a
+    recovering client would see its true staleness."""
+    model = FaultModel(slow_enter=1.0, slow_exit=0.0)
+    reals = _run_chain(model, 4, 6, key)
+    for r, real in enumerate(reals):
+        np.testing.assert_array_equal(np.asarray(real.slow), np.ones(4))
+        np.testing.assert_array_equal(np.asarray(real.active()), np.zeros(4))
+        np.testing.assert_array_equal(np.asarray(real.age), np.full(4, r))
+
+
+def test_host_replay_matches_stepped_chain(key):
+    model = FaultModel(link_fail=0.2, link_repair=0.4, node_fail=0.2,
+                       node_repair=0.5, slow_enter=0.2, slow_exit=0.6)
+    proc = FaultProcess(model, 6)
+    reals = _run_chain(model, 6, 8, key)
+    frs = host_realizations(proc, key, 0, 3, 8)
+    for r, hf in zip(range(3, 8), frs):
+        np.testing.assert_array_equal(hf.keep, np.asarray(reals[r].keep))
+        np.testing.assert_array_equal(hf.up, np.asarray(reals[r].up))
+        np.testing.assert_array_equal(hf.age, np.asarray(reals[r].age))
+    state = fault_state_at(proc, key, 0, 5)
+    # stepping the replayed state forward continues the same trajectory
+    _, real5 = proc.step(state, 5, proc.round_key(key, 5))
+    np.testing.assert_array_equal(np.asarray(real5.keep),
+                                  np.asarray(reals[5].keep))
+
+
+# ---------------------------------------------------------------------------
+# frozen clients + zero-rate transparency in the engine
+# ---------------------------------------------------------------------------
+
+def test_zero_rate_process_is_bit_transparent_for_local(toy, key):
+    """An installed process with every chain disabled realizes all-ones
+    masks; for a strategy with identity aggregation the faulted round body
+    must produce the bit-identical trajectory to no process at all."""
+    def fit(faults):
+        strat = LocalStrategy(feat_dim=12, num_classes=3, lr=0.5)
+        return Engine(strat, eval_every=4, faults=faults).fit(
+            toy, rounds=8, key=key, batch_size=8)
+
+    st0, h0 = fit(None)
+    st1, h1 = fit(FaultProcess(FaultModel(), 6))
+    assert h0.rounds == h1.rounds and h0.accuracy == h1.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(st0),
+                    jax.tree_util.tree_leaves(st1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_all_frozen_round_is_a_noop(toy, key):
+    """Every client a straggler ⇒ every round freezes: training is discarded
+    and the final state equals the init state."""
+    strat = LocalStrategy(feat_dim=12, num_classes=3, lr=0.5)
+    proc = FaultProcess(FaultModel(slow_enter=1.0, slow_exit=0.0), 6)
+    st, hist = Engine(strat, eval_every=4, faults=proc).fit(
+        toy, rounds=8, key=key, batch_size=8)
+    init_key, _ = jax.random.split(jax.random.fold_in(key, 0x9e37))
+    ref = strat.init(init_key, toy, 8)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist.metrics["participation_rate"][-1] == 0.0
+    assert hist.metrics["fault_slow"][-1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# P4 failover: deterministic next-up aggregator + quorum, traced ≡ host
+# ---------------------------------------------------------------------------
+
+def _p4_strategy(M=6):
+    from repro.config import DPConfig, P4Config, RunConfig, TrainConfig
+    from repro.core.p4 import P4Strategy, P4Trainer
+    cfg = RunConfig(dp=DPConfig(epsilon=15.0, rounds=8, sample_rate=0.5),
+                    p4=P4Config(group_size=3, sample_peers=5),
+                    train=TrainConfig(learning_rate=0.5))
+    strat = P4Strategy(trainer=P4Trainer(feat_dim=8, num_classes=3, cfg=cfg))
+    strat.set_groups([[0, 1, 2], [3, 4, 5]], M)
+    return strat
+
+
+class _FakeHostFaults:
+    def __init__(self, up, keep, model):
+        self.up = np.asarray(up, np.float32)
+        self.keep = np.asarray(keep, np.float32)
+        self.slow = np.zeros_like(self.up)
+        self.age = np.zeros_like(self.up)
+        self.model = model
+
+    @property
+    def active(self):
+        return self.up
+
+
+def _full_keep(up):
+    up = np.asarray(up, np.float32)
+    keep = up[:, None] * up[None, :]
+    np.fill_diagonal(keep, up)
+    return keep
+
+
+def test_failover_picks_next_up_member_and_enforces_quorum():
+    strat = _p4_strategy()
+    model = FaultModel(node_fail=0.5, quorum=0.5)
+    # group 0: scheduled aggregator (round 0, rotation 1) is client 0 — down;
+    # failover lands on client 1. group 1: 2/3 down — below quorum, silent.
+    up = [0, 1, 1, 1, 0, 0]
+    hf = _FakeHostFaults(up, _full_keep(up), model)
+    plan = strat._host_failover_plan(0, hf)
+    assert plan[0] == (1, True, True)          # (aggregator, ok, failed_over)
+    agg1, ok1, _ = plan[1]
+    assert not ok1
+
+    # the traced mask realizes the same plan: group 0 members reach the
+    # stand-in aggregator, group 1 is local-only
+    from repro.resilience import ActiveFaults
+    real = FaultRealization(keep=jnp.asarray(_full_keep(up)),
+                            up=jnp.asarray(up, jnp.float32),
+                            slow=jnp.zeros(6), age=jnp.zeros(6))
+    mask = np.asarray(strat._process_fault_mask(0, ActiveFaults(real, model)))
+    np.testing.assert_array_equal(mask, [0, 1, 1, 0, 0, 0])
+
+
+def test_failover_rotation_is_deterministic():
+    strat = _p4_strategy()
+    model = FaultModel(node_fail=0.5, quorum=0.0)
+    up = [1, 1, 0, 1, 1, 1]
+    hf = _FakeHostFaults(up, _full_keep(up), model)
+    # rotation=1: scheduled slot walks 0,1,2,0,... in group 0; round 2's
+    # scheduled aggregator (client 2) is down → next-up is client 0
+    assert strat._host_failover_plan(0, hf)[0][0] == 0
+    assert strat._host_failover_plan(1, hf)[0][0] == 1
+    assert strat._host_failover_plan(2, hf)[0] == (0, True, True)
+
+
+def test_failover_byte_accounting_and_counter():
+    from repro.core.p2p import P2PNetwork
+    strat = _p4_strategy()
+    model = FaultModel(node_fail=0.5, quorum=0.5)
+    up = [0, 1, 1, 1, 0, 0]
+    hf = _FakeHostFaults(up, _full_keep(up), model)
+    net = P2PNetwork(6)
+    states = {"proxy": {"w": jnp.zeros((6, 4), jnp.float32)}}
+    strat.log_communication(net, states, 0, faults=hf)
+    assert strat.failover_count == 1
+    # only group 0 exchanged, through the stand-in aggregator 1
+    assert net.num_messages() == 2           # 2↔1, both directions
+    assert {(m.src, m.dst) for m in net.log} == {(2, 1), (1, 2)}
+    # a dropped member↔aggregator link also silences that member
+    keep = _full_keep(up)
+    keep[2, 1] = keep[1, 2] = 0.0
+    net2 = P2PNetwork(6)
+    strat.failover_count = 0
+    strat.log_communication(net2, states, 0,
+                            faults=_FakeHostFaults(up, keep, model))
+    assert net2.num_messages() == 0 and strat.failover_count == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability: atomic writes, corruption detection, retention
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0, d=5):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(d, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+
+
+def test_checkpoint_roundtrip_with_metadata(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t,
+                    metadata={"history": {"rounds": [0, 3], "accuracy": [0.5, 0.625]}})
+    assert verify_checkpoint(str(tmp_path), 7)
+    meta = load_checkpoint_metadata(str(tmp_path), 7)
+    assert meta["step"] == 7 and meta["history"]["accuracy"] == [0.5, 0.625]
+    restored, step = restore_checkpoint(str(tmp_path), _tree(seed=1))
+    assert step == 7
+    np.testing.assert_array_equal(restored["w"], t["w"])
+
+
+def test_corrupt_archive_is_detected_and_skipped(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    save_checkpoint(str(tmp_path), 6, _tree(seed=1))
+    path = os.path.join(str(tmp_path), "ckpt_00000006.npz")
+    with open(path, "r+b") as f:          # flip bytes mid-archive
+        f.seek(os.path.getsize(path) // 2)
+        f.write(b"\xde\xad\xbe\xef")
+    assert not verify_checkpoint(str(tmp_path), 6)
+    assert latest_step(str(tmp_path)) == 3    # falls back to the durable one
+    with pytest.raises(CheckpointError, match="integrity"):
+        restore_checkpoint(str(tmp_path), _tree(), 6)
+
+
+def test_latest_step_ignores_tmp_orphans(tmp_path):
+    save_checkpoint(str(tmp_path), 4, _tree())
+    # a torn write leaves a deterministic .tmp orphan behind
+    for orphan in ("ckpt_00000009.npz.tmp", "ckpt_00000009.json.tmp"):
+        (tmp_path / orphan).write_bytes(b"torn")
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_restore_errors_name_the_leaf(tmp_path):
+    save_checkpoint(str(tmp_path), 2, _tree(d=5))
+    with pytest.raises(ValueError, match=r"leaf 'w' has shape \(5, 3\)"):
+        restore_checkpoint(str(tmp_path), _tree(d=9), 2)
+    with pytest.raises(ValueError, match="missing leaf 'extra'"):
+        restore_checkpoint(str(tmp_path), {**_tree(), "extra": np.zeros(2)}, 2)
+
+
+def test_keep_last_retention(tmp_path):
+    for s in range(5):
+        save_checkpoint(str(tmp_path), s, _tree(seed=s), keep_last=2)
+    files = sorted(os.listdir(str(tmp_path)))
+    assert files == ["ckpt_00000003.json", "ckpt_00000003.npz",
+                     "ckpt_00000004.json", "ckpt_00000004.npz"]
+
+
+# ---------------------------------------------------------------------------
+# auto-resume: restored History + state continue the exact trajectory
+# ---------------------------------------------------------------------------
+
+def _fit(data, ckpt_dir, key, rounds, faults=None, resume=False):
+    strat = LocalStrategy(feat_dim=12, num_classes=3, lr=0.5)
+    eng = Engine(strat, eval_every=3, checkpoint_dir=ckpt_dir, faults=faults)
+    return eng.fit(data, rounds=rounds, key=key, batch_size=8, resume=resume)
+
+
+@pytest.mark.parametrize("faulted", [False, True])
+def test_resume_is_bit_exact_with_uninterrupted(toy, key, tmp_path, faulted):
+    def mk_faults():
+        if not faulted:
+            return None
+        return make_fault_process(
+            FaultModel(link_fail=0.2, link_repair=0.5, node_fail=0.15,
+                       node_repair=0.5, slow_enter=0.2, slow_exit=0.5), 6)
+
+    full_dir, part_dir = str(tmp_path / "full"), str(tmp_path / "part")
+    st_full, h_full = _fit(toy, full_dir, key, 12, mk_faults())
+    # interrupted run: stops after round 6's checkpoint (a prefix of the
+    # full run's eval boundaries), then auto-resumes to the same horizon
+    _fit(toy, part_dir, key, 7, mk_faults())
+    assert latest_step(part_dir) == 6
+    st_res, h_res = _fit(toy, part_dir, key, 12, mk_faults(), resume=True)
+
+    assert h_res.rounds == h_full.rounds
+    assert h_res.accuracy == h_full.accuracy
+    assert h_res.metrics == h_full.metrics
+    for a, b in zip(jax.tree_util.tree_leaves(st_full),
+                    jax.tree_util.tree_leaves(st_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: SIGKILL a training subprocess mid-chunk, resume, compare
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["plain", "faulted"])
+def test_sigkill_resume_bit_exact(tmp_path, variant):
+    script = os.path.join(os.path.dirname(__file__), "_chaos_resume_main.py")
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    extra = ["faulted"] if variant == "faulted" else []
+
+    base_dir = str(tmp_path / "base")
+    p = subprocess.run([sys.executable, script, base_dir, "baseline"] + extra,
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert p.returncode == 0, p.stderr[-4000:]
+    baseline = json.loads(p.stdout.strip().splitlines()[-1])
+
+    crash_dir = str(tmp_path / "crash")
+    child = subprocess.Popen([sys.executable, script, crash_dir, "crash"]
+                             + extra, stdout=subprocess.DEVNULL,
+                             stderr=subprocess.DEVNULL, env=env)
+    try:
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            if child.poll() is not None:
+                break
+            ls = latest_step(crash_dir)
+            if ls is not None and ls >= 6:   # at least 3 durable checkpoints
+                break
+            time.sleep(0.05)
+        assert child.poll() is None, \
+            "crash-mode run finished before the kill landed"
+        os.kill(child.pid, signal.SIGKILL)
+        child.wait(timeout=60)
+    finally:
+        if child.poll() is None:
+            child.kill()
+    assert child.returncode == -signal.SIGKILL
+    killed_at = latest_step(crash_dir)
+    assert killed_at is not None and killed_at < 29
+
+    p = subprocess.run([sys.executable, script, crash_dir, "resume"] + extra,
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert p.returncode == 0, p.stderr[-4000:]
+    resumed = json.loads(p.stdout.strip().splitlines()[-1])
+
+    # ISSUE acceptance: resumed History and final state are bit-exact with
+    # the uninterrupted run
+    assert resumed == baseline

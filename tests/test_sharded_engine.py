@@ -172,6 +172,38 @@ def test_p4_fault_injection_equivalence(equivalence):
 
 
 @pytest.mark.slow
+def test_correlated_fault_regimes_equivalence(equivalence):
+    """ISSUE 6 acceptance: sharded ≡ single-device under the stateful fault
+    chains — the ``FaultState`` carry is replicated, so every slice steps the
+    identical Gilbert–Elliott / churn / partition realization."""
+    for name in ("dsgt_fault_burst", "dsgt_fault_churn",
+                 "dsgt_fault_partition"):
+        rec = equivalence[name]
+        assert rec["rounds_equal"] and rec["accuracy_bit_equal"], (name, rec)
+        assert rec["state_maxdiff"] < 1e-6, (name, rec)
+
+
+@pytest.mark.slow
+def test_straggler_chain_equivalence(equivalence):
+    """Straggler chains feed AsyncStaleness the realized per-client ages;
+    the fault-blended merge matches bit-exactly (FedAvg's server-style fold)
+    or to float ulps (P4's stacked per-client blend)."""
+    _assert_bit_exact(equivalence["fedavg_fault_straggler"])
+    rec = equivalence["p4_fault_straggler"]
+    assert rec["rounds_equal"] and rec["accuracy_bit_equal"], rec
+    assert rec["state_maxdiff"] < 1e-6, rec
+
+
+@pytest.mark.slow
+def test_aggregator_failover_equivalence(equivalence):
+    """Node churn + quorum: the traced failover mask (next-up aggregator,
+    below-quorum groups silenced) realizes identically on the resident and
+    gather layouts."""
+    _assert_bit_exact(equivalence["p4_fault_failover_resident"])
+    _assert_bit_exact(equivalence["p4_fault_failover_gather"])
+
+
+@pytest.mark.slow
 def test_p4_group_layouts(equivalence):
     """Groups that fit one slice aggregate without any collective; spanning
     groups take the gather path — both bit-exact."""

@@ -322,6 +322,51 @@ def test_dsgt_gossip_byte_accounting_respects_faults(dsgt_data, key):
         assert keep[m.src, m.dst] > 0, m
 
 
+def test_host_fault_masks_match_in_jit_draws(key):
+    """ISSUE 6 satellite: the host-side replay is bit-equal to the in-jit
+    ``draw_fault_masks`` realization across streams and rounds."""
+    from repro.topology.faults import draw_fault_masks, host_fault_masks
+    _, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+
+    @jax.jit
+    def in_jit(r, stream):
+        rk = jax.random.fold_in(phase_key, r)
+        return draw_fault_masks(jax.random.fold_in(rk, stream), 8, 0.3, 0.2)
+
+    for stream in (1, 2):
+        for r in range(5):
+            keep_j, up_j = in_jit(r, stream)
+            keep_h, up_h = host_fault_masks(phase_key, r, stream, 8, 0.3, 0.2)
+            np.testing.assert_array_equal(keep_h, np.asarray(keep_j))
+            np.testing.assert_array_equal(up_h, np.asarray(up_j))
+
+
+def test_host_realizations_match_scanned_fault_process(key):
+    """The correlated chains replay the same way: a traced ``lax.scan`` over
+    ``FaultProcess.step`` realizes bit-identical masks to the incremental
+    host-side ``host_realizations`` memo."""
+    from repro.resilience import FaultModel, FaultProcess, host_realizations
+    model = FaultModel(link_fail=0.25, link_repair=0.4, node_fail=0.2,
+                       node_repair=0.5, partition_prob=0.2,
+                       partition_repair=0.4, slow_enter=0.2, slow_exit=0.6)
+    proc = FaultProcess(model, 8)
+    _, phase_key = jax.random.split(jax.random.fold_in(key, 0x9e37))
+
+    def body(state, r):
+        state, real = proc.step(state, r, proc.round_key(phase_key, r))
+        return state, real
+
+    _, reals = jax.jit(lambda s: jax.lax.scan(body, s, jnp.arange(10)))(
+        proc.init_state())
+    hosts = host_realizations(proc, phase_key, 0, 0, 10)
+    assert len(hosts) == 10
+    for r, hf in enumerate(hosts):
+        np.testing.assert_array_equal(hf.keep, np.asarray(reals.keep[r]))
+        np.testing.assert_array_equal(hf.up, np.asarray(reals.up[r]))
+        np.testing.assert_array_equal(hf.slow, np.asarray(reals.slow[r]))
+        np.testing.assert_array_equal(hf.age, np.asarray(reals.age[r]))
+
+
 def test_fedavg_psum_fingerprint_differs_from_gather():
     """reduce is a dataclass field, so the two reduction modes can never
     share a compiled sharded chunk."""
