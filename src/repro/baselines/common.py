@@ -36,6 +36,15 @@ def client_grad(apply_fn, params, x, y, key, *, dp_cfg=None, sigma: float = 0.0,
     from repro.kernels.dp_clip.ref import static_zero_sigma
     loss = ce_loss(apply_fn)
     if dp_cfg is not None and dp_cfg.enabled and not static_zero_sigma(sigma):
+        if (apply_fn is linear_apply and not dp_cfg.microbatches
+                and not dp_cfg.per_example_chunk):
+            # linear softmax model: the whole round fuses into the dp_round
+            # kernel family (closed-form per-example grads on the Pallas
+            # path; the ref backend runs the composed pipeline verbatim)
+            from repro.kernels import dispatch
+            return dispatch.dp_round(loss, params, x, y, key,
+                                     clip=dp_cfg.clip_norm, sigma=sigma,
+                                     kernels=kernels)
         return dp_lib.dp_gradients(loss, params, {"x": x, "y": y}, key,
                                    clip=dp_cfg.clip_norm, sigma=sigma,
                                    microbatches=dp_cfg.microbatches,

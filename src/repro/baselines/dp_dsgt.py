@@ -105,19 +105,42 @@ class DPDSGTStrategy(Strategy):
 
     def sharded_local_update(self, state, xs, ys, r, key, ctx):
         """The gossip crosses client-shard boundaries, so it runs as a
-        ppermute halo exchange (shard-aligned ring), a slice-local gather
-        (shard-resident edges) or a gather round-trip (anything else);
-        gradients are per-client with the global key split's shard slice.
-        Same mixing arithmetic on the same neighbor values as
-        ``local_update`` — see ``repro.topology.mixing``."""
-        x_new = self.mix_sharded(state["x"], r, key, ctx)
+        ppermute halo exchange of just the boundary rows (bounded-bandwidth
+        graphs), a slice-local gather (shard-resident edges) or a gather
+        round-trip (anything else); gradients are per-client with the global
+        key split's shard slice. Same mixing arithmetic on the same neighbor
+        values as ``local_update`` — see ``repro.topology.mixing``. When the
+        engine carried prefetched halos (``sharded_prefetch``), both mixes
+        consume boundary rows whose ppermute was issued at the end of the
+        previous round, overlapping the transfer with that round's compute —
+        valid because both mixes read the round-START x and y, which is
+        exactly what was prefetched."""
+        from repro.engine.strategy import current_halos
+        halos = current_halos()
+        x_new = self.mix_sharded(state["x"], r, key, ctx,
+                                 halo=None if halos is None else halos["x"])
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
         g_new = self._grads_keyed(x_new, xs, ys, ctx.shard_keys(key))
-        y_new = self.mix_sharded(state["y"], r, key, ctx)
+        y_new = self.mix_sharded(state["y"], r, key, ctx,
+                                 halo=None if halos is None else halos["y"])
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
         return {"x": x_new, "y": y_new, "g": g_new}, {}
+
+    def sharded_prefetch(self, state, ctx):
+        """Issue the next round's boundary-row ppermutes from the end-of-
+        round state (x and y are mixed at round start, so the rows a shard
+        will need are known as soon as the round's update lands). Only the
+        halo path prefetches — local/gather/identity paths have nothing to
+        overlap."""
+        from repro.topology.mixing import select_mix_path, halo_start
+        if self._mix_plan is None:
+            return None
+        if select_mix_path(self._mix_plan, ctx) != "halo":
+            return None
+        return {"x": halo_start(state["x"], self._mix_plan, ctx),
+                "y": halo_start(state["y"], self._mix_plan, ctx)}
 
     def eval_params(self, state):
         return state["x"]

@@ -234,6 +234,7 @@ class KernelConfig:
     # explicit tile overrides; (0, 0) => autotune (or kernel defaults)
     dp_clip_tile: Tuple[int, int] = (0, 0)    # (tb, td)
     l1_tile: Tuple[int, int] = (0, 0)         # (tm, td)
+    dp_round_tile: int = 0                    # tf; 0 => autotune/default
 
 
 # ---------------------------------------------------------------------------

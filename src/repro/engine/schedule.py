@@ -406,6 +406,30 @@ class AsyncStaleness(RoundSchedule):
         return body
 
 
+def wrap_overlap(body, strategy, ctx):
+    """Thread the strategy's prefetched halo blocks through the scan carry.
+
+    The wrapped body's carry is ``(state, halos)``: the round's hooks trace
+    with ``current_halos()`` holding the blocks exchanged at the END of the
+    previous round (so the ppermute for round r's boundary rows was issued
+    before round r-1's local compute finished — compute/communication
+    overlap), and a fresh prefetch is issued from the new state afterwards.
+    Strategies that return None from ``sharded_prefetch`` carry an empty
+    tuple; their rounds trace exactly as before.
+    """
+    from repro.engine.strategy import sharded_halos
+
+    def wrapped(carry, r, phase_key, *data):
+        state, halos = carry
+        empty = isinstance(halos, tuple) and not halos
+        with sharded_halos(None if empty else halos):
+            state, out = body(state, r, phase_key, *data)
+        nxt = strategy.sharded_prefetch(state, ctx)
+        return (state, () if nxt is None else nxt), out
+
+    return wrapped
+
+
 def make_schedule(cfg) -> RoundSchedule:
     """Build a RoundSchedule from a ``repro.config.ScheduleConfig``."""
     if cfg is None or cfg.kind == "full":

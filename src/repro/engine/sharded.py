@@ -31,6 +31,7 @@ that possible:
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -53,6 +54,15 @@ def _pad_rows(arr, target: int):
     return jnp.pad(arr, pad)
 
 
+def _pad_axis1(arr, target: int):
+    """Zero-pad axis 1 (the client axis of a (rounds, M, ...) stack) to
+    ``target`` — the same zero padding ``shard_rows`` applies per round."""
+    if arr.shape[1] == target:
+        return arr
+    pad = [(0, 0), (0, target - arr.shape[1])] + [(0, 0)] * (arr.ndim - 2)
+    return jnp.pad(arr, pad)
+
+
 class ClientShardCtx:
     """Trace-time view of the client mesh inside the shard_map region.
 
@@ -68,6 +78,25 @@ class ClientShardCtx:
         self.n = int(mesh.shape[axis])
         self.M_pad = -(-self.M // self.n) * self.n
         self.m = self.M_pad // self.n
+        # per-round prefetched randomness (``prefetched``): this round's
+        # (m, 2) key slice / (m, B) batch-index slice, already sharded.
+        # Single-use — consumed by the first shard_keys / batch draw of the
+        # round, so a second call (if a strategy ever makes one) falls back
+        # to the replicated recompute instead of silently reusing a stream.
+        self._pf_keys = None
+        self._pf_idx = None
+
+    @contextlib.contextmanager
+    def prefetched(self, keys, idx):
+        """Trace-time context installed by the engine's scan body: the
+        round's per-client key slice and batch-index slice were derived
+        *outside* the scan (one vmapped draw for the whole chunk, sharded
+        over the mesh) so the round body itself runs zero random ops."""
+        self._pf_keys, self._pf_idx = keys, idx
+        try:
+            yield
+        finally:
+            self._pf_keys = self._pf_idx = None
 
     # ------------------------------------------------------------- indexing
     def shard_offset(self):
@@ -90,7 +119,12 @@ class ClientShardCtx:
     def shard_keys(self, key):
         """This shard's per-client keys — the *global* M-way split's slice,
         so client i's stream is independent of the mesh layout (split is not
-        prefix-stable; every shard recomputes the full split, replicated)."""
+        prefix-stable; every shard recomputes the full split, replicated).
+        When the engine prefetched this round's slice, consume it instead —
+        bit-identical (same derivation, hoisted out of the scan body)."""
+        if self._pf_keys is not None:
+            out, self._pf_keys = self._pf_keys, None
+            return out
         return self.shard_rows(jax.random.split(key, self.M))
 
     def sample_local_batches(self, train_x, train_y, key, batch_size):
@@ -99,9 +133,12 @@ class ClientShardCtx:
         onto this shard's data. ``batch_size=None`` = full local batch."""
         if batch_size is None:
             return train_x, train_y
-        R = train_y.shape[1]
-        idx = jax.random.randint(key, (self.M, batch_size), 0, R)
-        idx = self.shard_rows(idx)
+        if self._pf_idx is not None:
+            idx, self._pf_idx = self._pf_idx, None
+        else:
+            R = train_y.shape[1]
+            idx = jax.random.randint(key, (self.M, batch_size), 0, R)
+            idx = self.shard_rows(idx)
         xs = jnp.take_along_axis(
             train_x, idx.reshape(idx.shape + (1,) * (train_x.ndim - 2)),
             axis=1)
@@ -189,16 +226,49 @@ class ShardedEngine(Engine):
         if fn is not None:
             return fn
         ctx = ClientShardCtx(self.mesh, self.client_axis, data.num_clients)
+        from repro.engine.schedule import wrap_overlap
         body = self.schedule.sharded_round_body(self.strategy, batch_size, ctx)
+        body = wrap_overlap(body, self.strategy, ctx)
         faulted = self.faults is not None
         if faulted:
             from repro.resilience import wrap_round_body
             body = wrap_round_body(body, self.faults)
         mesh, axis = self.mesh, self.client_axis
+        strategy = self.strategy
         stacked_state = self.strategy.state_client_stacked
         repl = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
 
-        def run(state, phase_key, train_x, train_y, start, rt):
+        # Hot-loop randomness, hoisted: every shard would otherwise
+        # recompute the full M-way key split and (M, B) batch-index draw
+        # inside every scanned round (replicated, so it is pure overhead
+        # that scales with M). Derive the whole chunk's worth in one
+        # vmapped draw — bit-identical streams, since fold_in/split/randint
+        # are elementwise over rounds — pad with the same zeros shard_rows
+        # would add, and feed each round its slice through the scan xs.
+        # The draw runs in its OWN unsharded jit: under the mesh constraint
+        # the SPMD partitioner replicates the whole threefry chain on every
+        # device (measured ~4x the unsharded cost), so hash once and reshard
+        # the small result with device_put instead.
+        R = data.train_y.shape[1]
+        row_sh = NamedSharding(mesh, P(None, axis))
+
+        @jax.jit
+        def draw(phase_key, start):
+            rounds = start + jnp.arange(length)
+            rks = jax.vmap(lambda r: jax.random.fold_in(phase_key, r))(rounds)
+            keys_all = jax.vmap(
+                lambda k: jax.random.split(jax.random.fold_in(k, 1),
+                                           ctx.M))(rks)
+            pf = [_pad_axis1(keys_all, ctx.M_pad)]
+            if batch_size is not None:
+                idx_all = jax.vmap(
+                    lambda k: jax.random.randint(
+                        jax.random.fold_in(k, 0), (ctx.M, batch_size), 0,
+                        R))(rks)
+                pf.append(_pad_axis1(idx_all, ctx.M_pad))
+            return tuple(pf)
+
+        def chunk(state, phase_key, train_x, train_y, start, rt, *pf):
             CHUNK_STATS["traces"] += 1
             # under faults the carry is (strategy state, FaultState); the
             # fault chains are replicated — every slice steps the identical
@@ -208,23 +278,53 @@ class ShardedEngine(Engine):
             s0 = (client_specs(st, ctx.M_pad, axis)
                   if stacked_state(st) else repl(st))
             sspec = (s0, repl(state[1])) if faulted else s0
+            rounds = start + jnp.arange(length)
 
-            def sharded(state, phase_key, tx, ty, start, rt):
+            def sharded(state, phase_key, tx, ty, rounds, rt, *pf):
                 with runtime_params(rt):
-                    def scan_body(st, r):
-                        return body(st, r, phase_key, tx, ty)
-                    return jax.lax.scan(scan_body, state,
-                                        start + jnp.arange(length))
+                    st0 = state[0] if faulted else state
+                    h0 = strategy.sharded_prefetch(st0, ctx)
+                    h0 = () if h0 is None else h0
+                    carry = (((state[0], h0), state[1]) if faulted
+                             else (state, h0))
+
+                    def scan_body(c, xs_r):
+                        r, keys_r = xs_r[0], xs_r[1]
+                        idx_r = xs_r[2] if len(xs_r) > 2 else None
+                        with ctx.prefetched(keys_r, idx_r):
+                            return body(c, r, phase_key, tx, ty)
+
+                    # long chunks amortize scan bookkeeping by unrolling:
+                    # XLA fuses across consecutive rounds, which is where
+                    # the remaining per-round dispatch overhead of the
+                    # shard_map hot loop lives. Short chunks (the eval-dense
+                    # equivalence runs) keep unroll=1 — their bodies are the
+                    # heavy mixing ones and 8x the trace is real compile cost.
+                    unroll = 8 if length >= 64 else 1
+                    carry, out = jax.lax.scan(scan_body, carry,
+                                              (rounds,) + pf, unroll=unroll)
+                    if faulted:
+                        (st, _h), fstate = carry
+                        return (st, fstate), out
+                    st, _h = carry
+                    return st, out
 
             return shard_map_compat(
                 sharded, mesh,
-                in_specs=(sspec, P(), P(axis), P(axis), P(), P()),
+                in_specs=(sspec, P(), P(axis), P(axis), P(), P())
+                + (P(None, axis),) * len(pf),
                 out_specs=(sspec, P()),
-            )(state, phase_key, train_x, train_y, start, rt)
+            )(state, phase_key, train_x, train_y, rounds, rt, *pf)
 
-        fn = jax.jit(run, donate_argnums=0)
-        _cache_put(key_, fn)
-        return fn
+        jfn = jax.jit(chunk, donate_argnums=0)
+
+        def run(state, phase_key, train_x, train_y, start, rt):
+            pf = tuple(jax.device_put(a, row_sh)
+                       for a in draw(phase_key, start))
+            return jfn(state, phase_key, train_x, train_y, start, rt, *pf)
+
+        _cache_put(key_, run)
+        return run
 
     # --------------------------------------------- padded client representation
     def _train_arrays(self, data: FederatedData):

@@ -52,6 +52,32 @@ def runtime_params(params: Dict[str, jnp.ndarray]):
         _RUNTIME.params = prev
 
 
+# Compute/communication overlap: the sharded engine's scan body threads the
+# strategy's prefetched halo blocks (``Strategy.sharded_prefetch``) through
+# the scan carry and exposes them to the NEXT round's hooks through this
+# context — round r+1's boundary ppermute is issued at the end of round r's
+# body, before the next local_update trains. Same trace-time mechanism as
+# runtime_params: no hook-signature changes for strategies that don't opt in.
+_HALOS = threading.local()
+
+
+@contextlib.contextmanager
+def sharded_halos(halos):
+    """Trace-time context installed by the sharded scan body around each
+    round: ``halos`` is whatever the strategy's ``sharded_prefetch`` returned
+    at the end of the previous round (None when it doesn't prefetch)."""
+    prev = getattr(_HALOS, "value", None)
+    _HALOS.value = halos
+    try:
+        yield
+    finally:
+        _HALOS.value = prev
+
+
+def current_halos():
+    return getattr(_HALOS, "value", None)
+
+
 def runtime_sigma(static_sigma):
     """The traced σ if an engine runtime context is active, else the host
     value. Only substitutes when DP is actually on (static σ > 0) so the
@@ -250,10 +276,12 @@ class Strategy:
         keep = None if af is None else af.real.keep
         return mix_stacked(stacked_tree, self._mix_plan, r, key, keep=keep)
 
-    def mix_sharded(self, stacked_tree, r, key, ctx):
+    def mix_sharded(self, stacked_tree, r, key, ctx, halo=None):
         """Sharded twin of ``mix`` (inside the shard_map region): ppermute
-        halo exchange for the shard-aligned ring, slice-local gathers when
-        every edge is shard-resident, gather→mix→re-shard otherwise."""
+        halo exchange for banded/bounded-bandwidth graphs, slice-local
+        gathers when every edge is shard-resident, gather→mix→re-shard
+        otherwise. ``halo`` optionally carries boundary rows already
+        exchanged by ``sharded_prefetch`` in the previous round (overlap)."""
         if self._mix_plan is None:
             return stacked_tree
         from repro.resilience import current_faults
@@ -261,7 +289,7 @@ class Strategy:
         af = current_faults()
         keep = None if af is None else af.real.keep
         return mix_stacked_sharded(stacked_tree, self._mix_plan, r, key, ctx,
-                                   keep=keep)
+                                   keep=keep, halo=halo)
 
     # ------------------------------------------------------- sharded engine
     # These hooks run inside a shard_map region over the client mesh axis
@@ -286,6 +314,16 @@ class Strategy:
         state, per_client = self.local_update_keyed(
             state, xs, ys, r, ctx.shard_keys(key))
         return state, ctx.metric_means(per_client)
+
+    def sharded_prefetch(self, state, ctx):
+        """Issue next-round boundary transfers from the end-of-round state
+        (compute/communication overlap). Called by the sharded scan body
+        right after the round's hooks; whatever pytree it returns is carried
+        to the next round and exposed back to the hooks via
+        ``current_halos()`` while they trace. Return None (the default) to
+        opt out — the carry then holds an empty placeholder and the mixing
+        step issues its own exchange inline."""
+        return None
 
     def sharded_aggregate(self, state, r, key, ctx):
         """Aggregation as explicit collectives. Default: all_gather the

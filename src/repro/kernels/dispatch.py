@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.config import KernelConfig
 from repro.kernels.dp_clip import kernel as dp_kernel, ops as dp_ops, ref as dp_ref
+from repro.kernels.dp_round import (kernel as dpr_kernel, ops as dpr_ops,
+                                    ref as dpr_ref)
 from repro.kernels.l1_distance import kernel as l1_kernel, ops as l1_ops, ref as l1_ref
 from repro.utils.pytree import tree_flatten_concat, tree_unflatten_concat
 
@@ -121,6 +123,11 @@ def _dp_clip_candidates(B: int, D: int):
     return [(tb, td) for tb in tbs for td in tds] or [(8, 2048)]
 
 
+def _dp_round_candidates(F: int):
+    tfs = [tf for tf in (128, 256, 512) if tf <= max(128, F)]
+    return [(tf,) for tf in tfs] or [(128,)]
+
+
 def _l1_candidates(M: int, D: int):
     tms = [tm for tm in (8, 16) if tm <= max(8, M)]
     tds = [td for td in (2048, 8192) if td <= max(2048, D)]
@@ -143,6 +150,28 @@ def dp_clip_tiles(shape: Tuple[int, int], dtype, cfg: KernelConfig,
 
     return autotune("dp_clip", shape, dtype, backend,
                     _dp_clip_candidates(B, D), time_fn,
+                    trials=cfg.autotune_trials)
+
+
+def dp_round_tiles(shape: Tuple[int, int, int], dtype, cfg: KernelConfig,
+                   backend: str) -> Tuple[int]:
+    """shape = (B, F, C) of the fused round."""
+    if cfg.dp_round_tile != 0:
+        return (cfg.dp_round_tile,)
+    if backend != "pallas" or not cfg.autotune:
+        return (dpr_kernel.DEFAULT_TF,)
+    B, F, C = shape
+
+    def time_fn(cand):
+        (tf,) = cand
+        params = {"w": jnp.zeros((F, C), dtype), "b": jnp.zeros((C,), dtype)}
+        x = jnp.zeros((B, F), dtype)
+        y = jnp.zeros((B,), jnp.int32)
+        return _timed(lambda p, a, b: dpr_ops.dp_round_linear(
+            p, a, b, clip=1.0, interpret=False, tf=tf), params, x, y)
+
+    return autotune("dp_round", shape, dtype, backend,
+                    _dp_round_candidates(F), time_fn,
                     trials=cfg.autotune_trials)
 
 
@@ -217,6 +246,30 @@ def dp_clip(per_example_grads, clip: float, key=None, *, sigma: float = 0.0,
                        kernels=kernels)
     template = jax.tree_util.tree_map(lambda g: g[0], per_example_grads)
     return tree_unflatten_concat(out, template)
+
+
+def dp_round(loss_fn, params, x, y, key=None, *, clip: float,
+             sigma: float = 0.0, denom=None,
+             kernels: Optional[KernelConfig] = None):
+    """Fused local DP round: per-example grad → clip → accumulate → noise in
+    one kernel family (linear softmax model; ``loss_fn`` is only used by the
+    ref backend, which runs the composed autodiff pipeline verbatim — the
+    ref path is therefore bit-identical to not fusing at all). The Pallas
+    path uses the closed-form gradient: two matmul passes over the batch
+    instead of a B-way per-example gradient stack plus two clip passes."""
+    if not dp_ref.static_zero_sigma(sigma) and key is None:
+        raise ValueError("sigma > 0 requires a PRNG key (privacy guard)")
+    cfg = _cfg(kernels)
+    backend = resolve_backend(cfg.backend)
+    if backend == "ref":
+        return dpr_ref.dp_round_reference(loss_fn, params, x, y, key,
+                                          clip=clip, sigma=sigma)
+    B, F = x.shape
+    C = params["b"].shape[0]
+    (tf,) = dp_round_tiles((B, F, C), x.dtype, cfg, backend)
+    return dpr_ops.dp_round_linear(params, x, y, key, clip=clip, sigma=sigma,
+                                   denom=denom,
+                                   interpret=(backend == "interpret"), tf=tf)
 
 
 def pairwise_l1(weights, kernels: Optional[KernelConfig] = None):

@@ -1,0 +1,1 @@
+from repro.kernels.dp_round import ops, ref

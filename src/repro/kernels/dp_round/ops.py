@@ -1,0 +1,55 @@
+"""jit'd wrapper for the fused DP round on the linear model.
+
+Pads (B, F, C) to tile/lane multiples, runs the two Pallas passes with the
+O(B·C) clip/scale work between them in jnp, and adds the canonical flat
+noise. Backend/tile selection lives in ``repro.kernels.dispatch``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip.ref import add_flat_noise
+from repro.kernels.dp_round import kernel
+from repro.kernels.dp_round.ref import softmax_dlogits
+
+
+def _pad2(x, mb, mf):
+    B, F = x.shape
+    pb, pf = (-B) % mb, (-F) % mf
+    if pb or pf:
+        x = jnp.pad(x, ((0, pb), (0, pf)))
+    return x
+
+
+def dp_round_linear(params, x, y, key=None, *, clip: float,
+                    sigma: float = 0.0, denom=None, tf: int = 512,
+                    interpret: bool = True):
+    """Fused local DP round for the linear softmax model.
+
+    Pads B to a sublane multiple and F to the feature tile; padded batch
+    rows and padded classes are sliced away BEFORE the softmax (a padded
+    class would shift real probabilities), and padded rows re-enter pass B
+    with zero scaled-dlogits, so they contribute exactly nothing."""
+    B, F = x.shape
+    C = params["b"].shape[0]
+    if denom is None:
+        denom = float(B)
+    tf = min(tf, max(128, F))
+    Bp = -(-B // 8) * 8
+    Cp = -(-C // 128) * 128
+    xp = _pad2(x, 8, tf)
+    wp = jnp.pad(params["w"], ((0, xp.shape[1] - F), (0, Cp - C)))
+    bp = jnp.pad(params["b"], (0, Cp - C))
+    logits, xsq = kernel.logits_xsq(xp, wp, bp, tf=tf, interpret=interpret)
+    logits, xsq = logits[:B, :C], xsq[:B]
+    dl = softmax_dlogits(logits, y)
+    norms = jnp.sqrt(jnp.sum(dl * dl, axis=-1) * (1.0 + xsq))
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12)) / denom
+    sdl = dl * scales[:, None]
+    b_grad = jnp.sum(sdl, axis=0)
+    sdl_p = jnp.pad(sdl, ((0, Bp - B), (0, Cp - C)))
+    w_grad = kernel.wgrad(xp, sdl_p, tf=tf, interpret=interpret)[:F, :C]
+    flat = jnp.concatenate([b_grad, w_grad.ravel()])
+    flat = add_flat_noise(flat, key, sigma, clip, denom)
+    return {"b": flat[:C].astype(params["b"].dtype),
+            "w": flat[C:].reshape((F, C)).astype(params["w"].dtype)}

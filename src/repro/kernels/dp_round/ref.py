@@ -1,0 +1,79 @@
+"""Oracles for the fused DP-round kernel family.
+
+The sharded/engine DP hot loop composes, per client per round:
+
+    per-example grad (vmap) → per-example l2 clip → accumulate → noise
+
+For the linear softmax model (the paper's §4 client model) the per-example
+gradient has a closed form — dl = softmax(logits) − onehot(y), grad_w =
+xᵀ dl, grad_b = Σ dl, with per-example norm² = ‖dl‖²·(1 + ‖x‖²) — so the
+whole round collapses into one kernel: two matmul passes over the batch
+instead of a B-way vmapped autodiff stack plus two more passes over the
+(B, D) per-example matrix.
+
+Two oracles, used at different trust levels:
+
+  * ``dp_round_reference`` — the existing composed pipeline itself
+    (``repro.core.dp.dp_gradients``), called lazily. This IS the semantics
+    the megakernel must match; tests compare against it bit-for-bit on the
+    ref backend.
+  * ``dp_round_closed`` — the closed-form jnp oracle the Pallas kernel is
+    checked against (allclose; the closed form reorders the autodiff sums).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip.ref import add_flat_noise
+
+
+def dp_round_reference(loss_fn, params, x, y, key, *, clip: float,
+                       sigma: float = 0.0):
+    """The composed DP pipeline, verbatim: per-example autodiff → fused
+    clip/accumulate/noise through the dispatch layer. Lazy import — dp_round
+    is reachable from ``repro.core.dp`` itself via the dispatch module."""
+    from repro.core import dp as dp_lib
+    return dp_lib.dp_gradients(loss_fn, params, {"x": x, "y": y}, key,
+                               clip=clip, sigma=sigma)
+
+
+def softmax_dlogits(logits, y):
+    """(B, C) ∂CE/∂logits for integer labels: softmax − onehot, f32."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return p - jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+
+
+def linear_grads_closed(params, x, y):
+    """Closed-form per-example gradient factors for the linear model.
+
+    Returns ``(dl, xsq)``: dl (B, C) is the logit gradient, xsq (B,) the
+    per-example ‖x‖². The full per-example gradient is (dl_b, x_b ⊗ dl_b)
+    with squared norm ‖dl_b‖² · (1 + ‖x_b‖²) — never materialized."""
+    x32 = x.astype(jnp.float32)
+    logits = x32 @ params["w"].astype(jnp.float32) + params["b"]
+    dl = softmax_dlogits(logits, y)
+    return dl, jnp.sum(x32 * x32, axis=-1)
+
+
+def dp_round_closed(params, x, y, key=None, *, clip: float,
+                    sigma: float = 0.0, denom=None):
+    """Closed-form fused round in plain jnp: per-example clip scales from
+    the factored norm, then two matmuls build the clipped-mean gradient.
+    Noise goes through the one canonical flat-noise helper on the
+    [b, w.ravel()] layout (dict-sorted leaf order) so the same key draws
+    bit-identical noise to the composed pipeline."""
+    B = x.shape[0]
+    if denom is None:
+        denom = float(B)
+    dl, xsq = linear_grads_closed(params, x, y)
+    norms = jnp.sqrt(jnp.sum(dl * dl, axis=-1) * (1.0 + xsq))
+    scales = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12)) / denom
+    sdl = dl * scales[:, None]                       # (B, C)
+    b_grad = jnp.sum(sdl, axis=0)                    # (C,)
+    w_grad = x.astype(jnp.float32).T @ sdl           # (F, C)
+    flat = jnp.concatenate([b_grad, w_grad.ravel()])
+    flat = add_flat_noise(flat, key, sigma, clip, denom)
+    C = b_grad.shape[0]
+    return {"b": flat[:C].astype(params["b"].dtype),
+            "w": flat[C:].reshape(w_grad.shape).astype(params["w"].dtype)}

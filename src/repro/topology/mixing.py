@@ -18,10 +18,16 @@ Two layers:
         ``_ring_mix`` expression ``0.5·t + 0.25·(left + right)``;
       - general path: per-row self weights + per-slot neighbor weights
         (Metropolis rows, matchings, fault-adjusted rows);
-      - sharded paths (``mix_stacked_sharded``): ppermute halo exchange
-        when the topology is the shard-aligned ring, slice-local gathers
-        when every edge is shard-resident, and the gather→mix→re-shard
-        fallback (exact for any graph) otherwise.
+      - sharded paths (``mix_stacked_sharded``): a slice-local gather when
+        every edge is shard-resident (no collective at all), a ppermute
+        halo exchange of exactly the boundary rows when the graph has
+        bounded bandwidth under the shard layout (``halo_schedule`` —
+        rings, tori, circulant expanders, banded/clustered graphs, with
+        or without fault ``keep`` masks), and the gather→mix→re-shard
+        fallback (exact for any graph) otherwise. The trace-time
+        ``MIX_STATS`` probe records which path ran and how many
+        collectives it issued, so tests can assert "0 gathers per round"
+        for banded families.
 
     Link faults are drawn in-jit per round (``repro.topology.faults``) and
     folded into the row weights with the dropped mass moved to the diagonal,
@@ -264,6 +270,27 @@ def mix_stacked(tree, plan: MixPlan, r=0, key=None, keep=None):
 # Sharded execution (inside a shard_map region over the client axis)
 # ---------------------------------------------------------------------------
 
+# Trace-time collective probe (``CHUNK_STATS``-style counters): every sharded
+# mix records the path it took and the collectives it issued while tracing.
+# The scanned round body traces once per compiled chunk, so a snapshot delta
+# around a sharded run counts collectives PER ROUND — the sharded equivalence
+# tier asserts 0 all_gathers/round for banded/clustered/torus families.
+MIX_STATS = {
+    "calls": 0,
+    "path_identity": 0, "path_local": 0, "path_halo": 0, "path_gather": 0,
+    "all_gathers": 0,   # gather-fallback all_gather collectives (one per leaf)
+    "ppermutes": 0,     # halo-exchange ppermute collectives (leaf × hop)
+}
+
+
+def mix_stats_snapshot():
+    return dict(MIX_STATS)
+
+
+def reset_mix_stats() -> None:
+    for k in MIX_STATS:
+        MIX_STATS[k] = 0
+
 
 def edges_shard_resident(plan: MixPlan, ctx) -> bool:
     """Host-side layout check: every positive-weight edge stays inside one
@@ -277,24 +304,176 @@ def edges_shard_resident(plan: MixPlan, ctx) -> bool:
     return bool(np.all(~live | (rows // m == plan.nbr_np[0] // m)))
 
 
-def _halo_ring_mix(tree, plan: MixPlan, ctx):
-    """Shard-aligned ring gossip as a ppermute halo exchange — each slice
-    sends only its edge rows to its mesh neighbors. Bit-identical arithmetic
-    to the historical ``_ring_mix_sharded``."""
+@dataclass
+class HaloSchedule:
+    """A gather-free exchange plan for one (plan, mesh layout) pair: which
+    local rows every slice ppermutes to each mesh displacement, and where
+    every neighbor row lands in the per-slice receive buffer."""
+
+    sends: Tuple                  # ((disp, (k_d,) int32 local rows), ...)
+    H: int                        # total halo rows received per slice
+    buf_idx: np.ndarray           # (T, M_pad, degree) int32 positions into
+                                  # the (m + H, ...) [local ‖ halo] buffer
+
+
+def _build_halo_schedule(plan: MixPlan, n: int, m: int) -> Optional[HaloSchedule]:
+    """Derive the ppermute halo schedule from the graph's bandwidth under an
+    ``n`` slices × ``m`` rows shard layout.
+
+    For each mesh displacement ``d`` the send set is the UNION over slices of
+    the local boundary rows some neighbor slice ``d`` hops ahead needs — the
+    same local indices on every slice, which is what keeps the exchange SPMD
+    (a single ppermute per displacement moves every slice's boundary). For
+    time-varying plans the union also runs over the period, so the transfer
+    pattern is trace-static and only the per-round row weights vary.
+
+    Returns None when no exchange is needed (every edge shard-resident) or
+    when the halo would be as wide as a gather (H ≥ M_pad − m: dense rows,
+    e.g. Erdős–Rényi at small m) — callers fall back accordingly."""
+    if n <= 1 or plan.degree == 0:
+        return None
+    M, deg, T = plan.M, plan.degree, plan.period
+    M_pad = n * m
+    send_sets = [set() for _ in range(n)]           # indexed by displacement
+    for t in range(T):
+        for i in range(M):
+            p = i // m
+            for k in range(deg):
+                if plan.nbr_w_np[t, i, k] <= 0:
+                    continue
+                j = int(plan.nbr_np[t, i, k])
+                q = j // m
+                if q != p:
+                    send_sets[(p - q) % n].add(j - q * m)
+    sends = tuple((d, np.asarray(sorted(send_sets[d]), np.int32))
+                  for d in range(1, n) if send_sets[d])
+    H = sum(len(idx) for _, idx in sends)
+    if H == 0 or H >= M_pad - m:
+        return None
+    offsets, pos_in, off = {}, {}, m
+    for d, idx in sends:
+        offsets[d] = off
+        pos_in[d] = {int(v): i for i, v in enumerate(idx)}
+        off += len(idx)
+    buf_idx = np.zeros((T, M_pad, deg), np.int32)
+    for t in range(T):
+        for i in range(M_pad):
+            p, li = divmod(i, m)
+            for k in range(deg):
+                if i >= M or plan.nbr_w_np[t, i, k] <= 0:
+                    buf_idx[t, i, k] = li       # zero-weight slots self-loop
+                    continue
+                j = int(plan.nbr_np[t, i, k])
+                q, lj = divmod(j, m)
+                if q == p:
+                    buf_idx[t, i, k] = lj
+                else:
+                    d = (p - q) % n
+                    buf_idx[t, i, k] = offsets[d] + pos_in[d][lj]
+    return HaloSchedule(sends=sends, H=H, buf_idx=buf_idx)
+
+
+def halo_schedule(plan: MixPlan, ctx) -> Optional[HaloSchedule]:
+    """The plan's halo schedule for ``ctx``'s layout (memoized on the plan:
+    schedule construction is O(T·M·degree) host work)."""
+    cache = plan.__dict__.setdefault("_halo_cache", {})
+    key = (ctx.n, ctx.m)
+    if key not in cache:
+        cache[key] = _build_halo_schedule(plan, ctx.n, ctx.m)
+    return cache[key]
+
+
+def select_mix_path(plan: MixPlan, ctx) -> str:
+    """Host-side dispatch predicate for the sharded mix — the single source
+    of truth shared by ``mix_stacked_sharded`` and the overlap prefetch
+    (``halo_start`` callers), and what tier-1 tests assert without tracing:
+    ``identity`` | ``local`` | ``halo`` | ``gather``."""
+    if plan.degree == 0 or plan.M <= 1:
+        return "identity"
+    if edges_shard_resident(plan, ctx):
+        return "local"
+    if halo_schedule(plan, ctx) is not None:
+        return "halo"
+    return "gather"
+
+
+def _halo_exchange(t, sched: HaloSchedule, ctx):
+    """Issue the schedule's ppermutes for one leaf: the (H, ...) halo block
+    this slice receives, concatenated in send order."""
     import jax
     import jax.numpy as jnp
-    s, w = plan.uniform
-    fwd = [(i, (i + 1) % ctx.n) for i in range(ctx.n)]
-    bwd = [(i, (i - 1) % ctx.n) for i in range(ctx.n)]
+    parts = []
+    for disp, idx in sched.sends:
+        perm = [(s, (s + disp) % ctx.n) for s in range(ctx.n)]
+        parts.append(jax.lax.ppermute(t[jnp.asarray(idx)], ctx.axis, perm))
+        MIX_STATS["ppermutes"] += 1
+    return jnp.concatenate(parts, axis=0)
 
-    def mix(t):
-        prev_last = jax.lax.ppermute(t[-1:], ctx.axis, fwd)
-        next_first = jax.lax.ppermute(t[:1], ctx.axis, bwd)
-        left = jnp.concatenate([prev_last, t[:-1]], axis=0)
-        right = jnp.concatenate([t[1:], next_first], axis=0)
-        return s * t + w * (left + right)
 
-    return jax.tree_util.tree_map(mix, tree)
+def halo_start(tree, plan: MixPlan, ctx):
+    """Kick off a round's boundary transfer ahead of time (the overlap half
+    of the halo path): returns the halo-block tree that
+    ``mix_stacked_sharded(..., halo=...)`` consumes. Rows are sent RAW and
+    the (possibly fault-adjusted) row weights are applied at consume time,
+    so a prefetched halo stays exact under ``keep`` masks. Only call when
+    ``select_mix_path(plan, ctx) == "halo"``."""
+    import jax
+    sched = halo_schedule(plan, ctx)
+    return jax.tree_util.tree_map(
+        lambda t: _halo_exchange(t, sched, ctx), tree)
+
+
+def _halo_mix(tree, plan: MixPlan, r, key, ctx, keep=None, halo=None):
+    """Gather-free sparse mix: ppermute only the boundary rows the schedule
+    derived, then run the single-device per-row arithmetic against the
+    (m + H, ...) receive buffer — value-identical reads in the identical
+    slot-accumulation order, so the result matches the single-device step to
+    the commutativity of each two-term float add. ``halo`` is an optional
+    prefetched halo-block tree (issued by ``halo_start`` at the end of the
+    previous round body — the double-buffered overlap path)."""
+    import jax
+    import jax.numpy as jnp
+    sched = halo_schedule(plan, ctx)
+    local_idx = ctx.shard_rows(
+        _round_slice(sched.buf_idx, r, plan.period))    # (m, degree) slots
+
+    def apply(mix_fn):
+        if halo is None:
+            return jax.tree_util.tree_map(
+                lambda t: mix_fn(t, _halo_exchange(t, sched, ctx)), tree)
+        return jax.tree_util.tree_map(mix_fn, tree, halo)
+
+    if plan.uniform is not None and not plan.faulty and keep is None:
+        s, w = plan.uniform
+
+        def mix_u(t, hblock):
+            buf = jnp.concatenate([t, hblock], axis=0)
+            acc = buf[local_idx[:, 0]]
+            for k in range(1, plan.degree):
+                acc = acc + buf[local_idx[:, k]]
+            return s * t + w * acc
+
+        return apply(mix_u)
+
+    M, d = plan.M, plan.degree
+    s_full, w_full = _fault_adjusted_rows(
+        plan, _round_slice(plan.nbr_np, r, plan.period), r, key, keep=keep)
+    s_row = ctx.shard_rows(jnp.concatenate(
+        [s_full, jnp.ones((ctx.M_pad - M,), s_full.dtype)]) if ctx.M_pad != M
+        else s_full)
+    w_row = ctx.shard_rows(jnp.concatenate(
+        [w_full, jnp.zeros((ctx.M_pad - M, d), w_full.dtype)])
+        if ctx.M_pad != M else w_full)
+
+    def mix_g(t, hblock):
+        buf = jnp.concatenate([t, hblock], axis=0)
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        acc = s_row.reshape(ex) * t
+        for k in range(d):
+            acc = acc + w_row[:, k].reshape(ex) * buf[local_idx[:, k]]
+        return acc.astype(t.dtype)
+
+    return apply(mix_g)
 
 
 def _pad_rows_np(arr: np.ndarray, target: int, fill):
@@ -348,25 +527,41 @@ def _local_mix(tree, plan: MixPlan, r, key, ctx, keep=None):
     return jax.tree_util.tree_map(mix_g, tree)
 
 
-def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx, keep=None):
-    """Sharded twin of ``mix_stacked`` (call inside the shard_map region):
+def mix_stacked_sharded(tree, plan: MixPlan, r, key, ctx, keep=None,
+                        halo=None):
+    """Sharded twin of ``mix_stacked`` (call inside the shard_map region) —
+    path selection is host-side (``select_mix_path``) and recorded by the
+    ``MIX_STATS`` probe:
 
-      ring, shard-aligned, fault-free → ppermute halo exchange;
-      all edges shard-resident         → slice-local gather (no collective);
-      anything else                    → all_gather → mix → re-shard, which
-                                         is bit-exact with the single-device
-                                         step by construction.
+      all live edges shard-resident → slice-local gather (no collective);
+      bounded-bandwidth graph       → ppermute halo exchange of exactly the
+                                      boundary rows (``halo_schedule``). This
+                                      subsumes the old shard-aligned-ring
+                                      special case and composes with fault
+                                      ``keep`` masks: dropped mass moves to
+                                      the diagonal locally, no collective
+                                      beyond the same boundary rows;
+      anything else                 → all_gather → mix → re-shard, which is
+                                      bit-exact with the single-device step
+                                      by construction.
 
     Fault draws are replicated (every shard draws the identical (M, M) keep
     matrix from the same key) so realized topologies agree across layouts;
     an external correlated ``keep`` realization is replicated by the same
     argument (the fault carry is stepped identically on every slice).
+    ``halo`` is an optional prefetched halo-block tree from ``halo_start``
+    (the compute/communication overlap path); only the halo path consumes it.
     """
-    if plan.degree == 0 or plan.M <= 1:
+    import jax
+    MIX_STATS["calls"] += 1
+    path = select_mix_path(plan, ctx)
+    MIX_STATS["path_" + path] += 1
+    if path == "identity":
         return tree
-    if plan.ring and not plan.faulty and keep is None and ctx.M_pad == ctx.M:
-        return _halo_ring_mix(tree, plan, ctx)
-    if edges_shard_resident(plan, ctx):
+    if path == "local":
         return _local_mix(tree, plan, r, key, ctx, keep=keep)
+    if path == "halo":
+        return _halo_mix(tree, plan, r, key, ctx, keep=keep, halo=halo)
+    MIX_STATS["all_gathers"] += len(jax.tree_util.tree_leaves(tree))
     full = ctx.gather(tree)
     return ctx.scatter_like(mix_stacked(full, plan, r, key, keep=keep), full)

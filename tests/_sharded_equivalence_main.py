@@ -45,7 +45,8 @@ def main() -> None:
     from repro.engine import (AsyncStaleness, ClientSampling, ClientShardCtx,
                               Engine, FederatedData, ShardedEngine)
     from repro.launch.mesh import make_client_mesh
-    from repro.topology.mixing import edges_shard_resident, make_plan
+    from repro.topology.mixing import (edges_shard_resident, make_plan,
+                                       mix_stats_snapshot, reset_mix_stats)
 
     assert len(jax.devices()) == 8, jax.devices()
     mesh8 = make_client_mesh()
@@ -68,10 +69,15 @@ def main() -> None:
         st1, h1 = Engine(mk_strategy(), eval_every=3, schedule=mk_sched(),
                          faults=mk_faults()).fit(
             data, rounds=rounds, key=key, batch_size=batch)
+        # collective probe: trace-time counts over the sharded run only (the
+        # single-device mix never touches MIX_STATS). Counts are per chunk
+        # trace, so "0 gathers" is asserted as all_gathers == 0 outright.
+        reset_mix_stats()
         st2, h2 = ShardedEngine(mk_strategy(), eval_every=3, mesh=mesh,
                                 schedule=mk_sched(), faults=mk_faults()).fit(
             data, rounds=rounds, key=key, batch_size=batch)
         results[name] = {
+            "mix_stats": mix_stats_snapshot(),
             "rounds_equal": h1.rounds == h2.rounds,
             "accuracy_bit_equal": h1.accuracy == h2.accuracy,
             "accuracy_maxdiff": float(max(abs(a - b) for a, b in
@@ -174,6 +180,25 @@ def main() -> None:
         feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
         topology=topo_lib.gossip_matchings(M, period=4, seed=0)))
 
+    # ISSUE 7: banded topologies must stay gather-free on the sharded path —
+    # keep-masked / i.i.d.-faulty rings route through the halo exchange
+    # (dropped mass folds into the diagonal locally, no collective), and the
+    # torus rides the general bounded-bandwidth halo schedule
+    compare("dsgt_ring_faulty", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=topo_lib.ring(M).with_faults(0.25, 0.1)))
+    from repro.resilience import (FaultModel, gilbert_elliott_rates,
+                                  make_fault_process)
+    ge_fail, ge_repair = gilbert_elliott_rates(0.3, 3.0)
+    compare("dsgt_ring_burst", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=topo_lib.ring(M)),
+        faults=lambda: make_fault_process(
+            FaultModel(link_fail=ge_fail, link_repair=ge_repair), M))
+    compare("dsgt_torus", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=topo_lib.torus(4, 2)))
+
     # shard-resident topology on a 2-slice mesh: the mix needs no collective
     mesh2_t = make_client_mesh(2)
     resident_topo = topo_lib.group_clustered([[0, 1, 2, 3], [4, 5, 6, 7]], M,
@@ -242,10 +267,6 @@ def main() -> None:
     # the FaultState carry is replicated across slices (every shard steps the
     # identical Markov transition from the replicated phase key), so every
     # regime must realize the same masks on both layouts
-    from repro.resilience import (FaultModel, gilbert_elliott_rates,
-                                  make_fault_process)
-
-    ge_fail, ge_repair = gilbert_elliott_rates(0.3, 3.0)
     regimes = {
         "burst": FaultModel(link_fail=ge_fail, link_repair=ge_repair),
         "churn": FaultModel(node_fail=0.25, node_repair=0.4),

@@ -253,3 +253,89 @@ def test_dispatched_pairwise_l1_matches_ref(key):
     want = l1_ref.pairwise_l1(w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused dp_round: dispatch policy, tiles, and the client_grad fast path
+# ---------------------------------------------------------------------------
+
+def _linear_loss():
+    from repro.baselines.common import ce_loss, linear_apply
+    return ce_loss(linear_apply)
+
+
+def test_dp_round_candidates_respect_feature_dim():
+    assert dispatch._dp_round_candidates(32) == [(128,)]
+    assert dispatch._dp_round_candidates(128) == [(128,)]
+    assert dispatch._dp_round_candidates(256) == [(128,), (256,)]
+    assert dispatch._dp_round_candidates(4096) == [(128,), (256,), (512,)]
+
+
+def test_dp_round_tiles_policy():
+    from repro.kernels.dp_round import kernel as dpr_kernel
+    # explicit tile bypasses autotune entirely
+    cfg = KernelConfig(dp_round_tile=256)
+    assert dispatch.dp_round_tiles((8, 512, 10), jnp.float32, cfg,
+                                   "pallas") == (256,)
+    # non-pallas backends never autotune: static default
+    cfg = KernelConfig()
+    assert dispatch.dp_round_tiles((8, 512, 10), jnp.float32, cfg,
+                                   "interpret") == (dpr_kernel.DEFAULT_TF,)
+    cfg = KernelConfig(autotune=False)
+    assert dispatch.dp_round_tiles((8, 512, 10), jnp.float32, cfg,
+                                   "pallas") == (dpr_kernel.DEFAULT_TF,)
+
+
+def test_dp_round_dispatch_bit_equivalent_to_composed_pipeline(key):
+    """Dispatch policy on CPU: auto resolves to ref, and the ref backend IS
+    dp_gradients — the client_grad fast path cannot move a single bit."""
+    B, F, C = 12, 64, 10
+    loss = _linear_loss()
+    params = {"w": jax.random.normal(key, (F, C)) * 0.3,
+              "b": jnp.zeros((C,))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, F))
+    y = jax.random.randint(jax.random.fold_in(key, 2), (B,), 0, C)
+    nk = jax.random.fold_in(key, 3)
+    got = dispatch.dp_round(loss, params, x, y, nk, clip=0.8, sigma=1.1,
+                            kernels=KernelConfig(backend="auto"))
+    want = dp_lib.dp_gradients(loss, params, {"x": x, "y": y}, nk,
+                               clip=0.8, sigma=1.1)
+    for k in want:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+def test_client_grad_routes_linear_dp_through_dp_round(key, monkeypatch):
+    """The engine's per-client DP grad takes the fused entry point for the
+    linear model (and only for configs the closed form covers)."""
+    from repro.baselines import common
+    from repro.config import DPConfig
+    B, F, C = 8, 32, 4
+    params = {"w": jax.random.normal(key, (F, C)), "b": jnp.zeros((C,))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, F))
+    y = jax.random.randint(jax.random.fold_in(key, 2), (B,), 0, C)
+    calls = []
+    orig = dispatch.dp_round
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(dispatch, "dp_round", spy)
+    dp_cfg = DPConfig(enabled=True, clip_norm=0.7)
+    g = common.client_grad(common.linear_apply, params, x, y, key,
+                           dp_cfg=dp_cfg, sigma=0.9)
+    assert calls and np.isfinite(np.asarray(g["w"])).all()
+    # microbatching is outside the closed form: composed pipeline instead
+    calls.clear()
+    dp_cfg = DPConfig(enabled=True, clip_norm=0.7, per_example_chunk=4)
+    common.client_grad(common.linear_apply, params, x, y, key,
+                       dp_cfg=dp_cfg, sigma=0.9)
+    assert not calls
+
+
+def test_dp_round_sigma_without_key_raises(key):
+    params = {"w": jax.random.normal(key, (8, 3)), "b": jnp.zeros((3,))}
+    x = jax.random.normal(key, (4, 8))
+    y = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="PRNG key"):
+        dispatch.dp_round(_linear_loss(), params, x, y, clip=1.0, sigma=0.5)

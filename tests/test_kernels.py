@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.dp_clip import ops as dp_ops, ref as dp_ref
+from repro.kernels.dp_round import ops as dpr_ops, ref as dpr_ref
 from repro.kernels.flash_attention import kernel as fl_kernel, ops as fl_ops, ref as fl_ref
 from repro.kernels.l1_distance import ops as l1_ops, ref as l1_ref
 
@@ -103,3 +104,65 @@ def test_flash_matches_model_chunked_path(key):
     flash = fl_ops.flash_attention_gqa(q, k, v, block_q=64, block_k=64)
     np.testing.assert_allclose(np.asarray(chunked), np.asarray(flash),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dp_round (fused local_update -> clip -> noise megakernel, linear model)
+# ---------------------------------------------------------------------------
+
+def _linear_problem(key, B, F, C):
+    from repro.baselines.common import ce_loss, linear_apply
+    kp, kx, ky = jax.random.split(key, 3)
+    params = {"w": jax.random.normal(kp, (F, C)) * 0.3,
+              "b": jax.random.normal(jax.random.fold_in(kp, 1), (C,)) * 0.1}
+    x = jax.random.normal(kx, (B, F)) * 2
+    y = jax.random.randint(ky, (B,), 0, C)
+    return ce_loss(linear_apply), params, x, y
+
+
+@pytest.mark.parametrize("B,F,C", [(3, 32, 3), (8, 130, 10), (17, 64, 10)])
+@pytest.mark.parametrize("sigma", [0.0, 1.3])
+def test_dp_round_closed_matches_reference(key, B, F, C, sigma):
+    """The closed-form oracle reorders the autodiff sums but computes the
+    same clipped-mean DP gradient — and the SAME noise bits (one canonical
+    flat-noise helper, identical [b, w.ravel()] layout)."""
+    loss, params, x, y = _linear_problem(key, B, F, C)
+    nk = jax.random.fold_in(key, 7)
+    want = dpr_ref.dp_round_reference(loss, params, x, y, nk,
+                                      clip=0.8, sigma=sigma)
+    got = dpr_ref.dp_round_closed(params, x, y, nk, clip=0.8, sigma=sigma)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B", [3, 8, 17])
+@pytest.mark.parametrize("F", [32, 130])
+@pytest.mark.parametrize("C", [3, 10])
+def test_dp_round_kernel_padding_sweep(key, B, F, C):
+    """Interpret-mode Pallas passes vs the closed-form oracle across batch /
+    feature / class paddings (B to sublane, F to tile, C to lane)."""
+    _, params, x, y = _linear_problem(key, B, F, C)
+    nk = jax.random.fold_in(key, 3)
+    want = dpr_ref.dp_round_closed(params, x, y, nk, clip=1.1, sigma=0.7)
+    got = dpr_ops.dp_round_linear(params, x, y, nk, clip=1.1, sigma=0.7,
+                                  tf=128, interpret=True)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_dp_round_noise_bit_identical_to_canonical_helper(key):
+    """With the same key the fused kernel's noise is exactly the canonical
+    Eq. 11 draw added onto its own noiseless output."""
+    _, params, x, y = _linear_problem(key, 8, 64, 10)
+    nk = jax.random.fold_in(key, 5)
+    B = x.shape[0]
+    noiseless = dpr_ops.dp_round_linear(params, x, y, clip=0.9)
+    noised = dpr_ops.dp_round_linear(params, x, y, nk, clip=0.9, sigma=1.3)
+    flat = jnp.concatenate([noiseless["b"], noiseless["w"].ravel()])
+    want = dp_ref.add_flat_noise(flat, nk, 1.3, 0.9, float(B))
+    C = params["b"].shape[0]
+    assert np.array_equal(np.asarray(noised["b"]), np.asarray(want[:C]))
+    assert np.array_equal(np.asarray(noised["w"]),
+                          np.asarray(want[C:].reshape(params["w"].shape)))

@@ -154,6 +154,37 @@ def test_dsgt_faulty_topology_equivalence(equivalence):
 
 
 @pytest.mark.slow
+def test_banded_topologies_gather_free(equivalence):
+    """ISSUE 7 acceptance: banded/bounded-bandwidth graphs (ring, faulty
+    ring, keep-masked ring, torus, circulant expander) never fall back to
+    the all_gather mixing path — the collective probe records only halo
+    ppermutes for them (per chunk trace, so 0 gathers is 0 outright)."""
+    for name in ("dsgt_full", "dsgt_ring_faulty", "dsgt_ring_burst",
+                 "dsgt_torus", "dsgt_topology_expander",
+                 "dsgt_topology_faulty"):
+        stats = equivalence[name]["mix_stats"]
+        assert stats["all_gathers"] == 0, (name, stats)
+        assert stats["path_gather"] == 0, (name, stats)
+        assert stats["ppermutes"] > 0, (name, stats)
+        assert stats["path_halo"] > 0, (name, stats)
+    # shard-resident layout: no collective of either kind in the mix
+    stats = equivalence["dsgt_topology_resident"]["mix_stats"]
+    assert stats["all_gathers"] == 0 and stats["ppermutes"] == 0, stats
+    assert stats["path_local"] > 0, stats
+
+
+@pytest.mark.slow
+def test_banded_faulty_equivalence(equivalence):
+    """ISSUE 7 satellite: keep-masked / i.i.d.-faulty rings and the torus
+    route through the halo path AND stay equivalent to single-device."""
+    for name in ("dsgt_ring_faulty", "dsgt_ring_burst", "dsgt_torus"):
+        rec = equivalence[name]
+        assert rec["rounds_equal"] and rec["accuracy_maxdiff"] < 1e-5, (name,
+                                                                       rec)
+        assert rec["state_maxdiff"] < 1e-6, (name, rec)
+
+
+@pytest.mark.slow
 def test_topology_resident_layout(equivalence):
     layout = equivalence["topology_resident_layout"]
     assert layout["resident_on_2"] is True

@@ -374,3 +374,149 @@ def test_fedavg_psum_fingerprint_differs_from_gather():
     a = FedAvgStrategy(feat_dim=4, num_classes=2)
     b = FedAvgStrategy(feat_dim=4, num_classes=2, reduce="gather")
     assert a.fingerprint() != b.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7: halo-exchange schedules — gather-free sparse mixing
+# ---------------------------------------------------------------------------
+
+class _HostCtx:
+    """Host-side stand-in for ClientShardCtx: the halo-schedule builder and
+    the path predicate only read the layout constants."""
+
+    def __init__(self, M: int, n: int):
+        self.M = M
+        self.n = n
+        self.M_pad = -(-M // n) * n
+        self.m = self.M_pad // n
+
+
+def _halo_covers_exactly(plan, n: int) -> bool:
+    """The derived schedule must map every weight-positive slot of every
+    round's W to the right global neighbor row — same-slice slots to the
+    local block, off-slice slots to the matching position of the matching
+    displacement's halo block — and padded/zero-weight slots to a self
+    index."""
+    from repro.topology.mixing import halo_schedule
+    ctx = _HostCtx(plan.M, n)
+    sched = halo_schedule(plan, ctx)
+    if sched is None:
+        return True     # unprofitable layouts legitimately decline
+    m = ctx.m
+    offsets, blocks = {}, {}
+    off = m
+    for disp, idx in sched.sends:
+        offsets[disp] = off
+        blocks[disp] = idx
+        off += len(idx)
+    for t in range(plan.period):
+        for i in range(ctx.M_pad):
+            p, li = divmod(i, m)
+            for k in range(plan.degree):
+                pos = int(sched.buf_idx[t, i, k])
+                if i >= plan.M or plan.nbr_w_np[t, i, k] <= 0:
+                    if pos != li:
+                        return False
+                    continue
+                j = int(plan.nbr_np[t, i, k])
+                if pos < m:                      # local block
+                    if p * m + pos != j:
+                        return False
+                else:                            # halo block of some disp
+                    hit = False
+                    for disp, idx in sched.sends:
+                        o = offsets[disp]
+                        if o <= pos < o + len(idx):
+                            src = (p - disp) % ctx.n
+                            hit = src * m + int(idx[pos - o]) == j
+                            break
+                    if not hit:
+                        return False
+    return True
+
+
+@_settings
+@given(st.sampled_from(FAMILIES), st.integers(4, 24), st.integers(2, 6),
+       st.integers(0, 5), st.sampled_from([2, 4, 8]))
+def test_halo_schedule_covers_nonzero_offslice_entries(family, M, k, seed, n):
+    """Property (ISSUE 7): for every builder × (M, devices) layout, the halo
+    schedule reconstructs exactly the nonzero off-slice entries of W."""
+    plan = make_plan(_build(family, M, k, seed))
+    assert _halo_covers_exactly(plan, n), (family, M, k, seed, n)
+
+
+@_settings
+@given(st.integers(8, 24), st.sampled_from([2, 4, 8]), st.integers(0, 3))
+def test_time_varying_halo_schedule_covers_every_round(M, n, seed):
+    plan = make_plan(topo_lib.gossip_matchings(M, period=4, seed=seed))
+    assert _halo_covers_exactly(plan, n)
+
+
+def test_banded_families_never_gather():
+    """The bounded-bandwidth families must take the halo (or cheaper) path
+    on an 8-slice layout — the gather fallback is reserved for dense
+    graphs."""
+    from repro.topology.mixing import select_mix_path
+    ctx = _HostCtx(16, 8)
+    banded = {
+        "ring": topo_lib.ring(16),
+        "faulty_ring": topo_lib.ring(16).with_faults(0.3, 0.1),
+        "torus": topo_lib.torus(4, 4),
+        "k_regular": topo_lib.k_regular(16, 4),
+        "clustered": topo_lib.group_clustered(
+            [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11], [12, 13, 14, 15]],
+            16, bridge=False),
+    }
+    for name, topo in banded.items():
+        path = select_mix_path(make_plan(topo), ctx)
+        assert path in ("local", "halo"), (name, path)
+    # dense graphs do fall back — the schedule would ship nearly all of M
+    dense = select_mix_path(make_plan(topo_lib.fully_connected(16)), ctx)
+    assert dense == "gather"
+
+
+def test_halo_mix_matches_single_device_all_paths():
+    """Host-checkable equivalence of the traced halo consume: build the
+    (T, M_pad, degree) receive-buffer indexing and apply it in numpy against
+    the single-device ``mix_stacked`` for a faulty banded graph."""
+    from repro.topology.mixing import halo_schedule, _round_slice
+    rng = np.random.default_rng(0)
+    for topo in (topo_lib.ring(12), topo_lib.k_regular(12, 4),
+                 topo_lib.torus(4, 3)):
+        plan = make_plan(topo)
+        ctx = _HostCtx(12, 4)
+        sched = halo_schedule(plan, ctx)
+        assert sched is not None, topo.family
+        x = rng.normal(size=(12, 5)).astype(np.float32)
+        want = np.asarray(mix_stacked(jnp.asarray(x), plan, 0, None))
+        # emulate the traced consume: global buffer = [slice rows | halos]
+        m = ctx.m
+        got = np.zeros_like(x)
+        for p in range(ctx.n):
+            halos = []
+            for disp, idx in sched.sends:
+                src = (p - disp) % ctx.n
+                halos.append(x[src * m + np.asarray(idx)])
+            buf = np.concatenate([x[p * m:(p + 1) * m]] + halos, axis=0)
+            s, w = plan.uniform
+            bi = sched.buf_idx[0, p * m:(p + 1) * m]
+            acc = buf[bi[:, 0]]
+            for kk in range(1, plan.degree):
+                acc = acc + buf[bi[:, kk]]
+            got[p * m:(p + 1) * m] = s * x[p * m:(p + 1) * m] + w * acc
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_collective_probe_counters():
+    """MIX_STATS is a plain trace-time counter dict: snapshot copies,
+    reset zeroes."""
+    from repro.topology.mixing import (MIX_STATS, mix_stats_snapshot,
+                                       reset_mix_stats)
+    reset_mix_stats()
+    MIX_STATS["ppermutes"] += 3
+    snap = mix_stats_snapshot()
+    assert snap["ppermutes"] == 3 and snap["all_gathers"] == 0
+    MIX_STATS["ppermutes"] += 1
+    assert snap["ppermutes"] == 3      # snapshot is a copy
+    reset_mix_stats()
+    assert mix_stats_snapshot()["ppermutes"] == 0
