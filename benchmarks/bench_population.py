@@ -1,0 +1,161 @@
+"""Million-client paging throughput: rounds/sec vs virtual population size.
+
+The resident engine's round cost scales with M (every client's state and
+batch draw is materialized on device), so M is capped by device memory and
+round latency. ``PagedEngine`` pins the device working set to the *cohort*
+(q·M clients); this suite sweeps M with a fixed active cohort and records
+the rounds/sec curve — the ISSUE 8 acceptance is that a population of
+M ≥ 1e5 virtual clients trains at least as fast as the resident engine's
+current M=16 configuration (same model, same cohort width doing real work).
+
+Honest-measurement notes: the per-round cost that still scales with M is
+the layout-invariant full-M participation draw (mode="fixed" argsorts an
+(M,) vector per round — the price of the paged ≡ resident PRNG contract)
+and the host-side cohort planning replay; both are in the timed region.
+Writes ``BENCH_population.json`` via ``benchmarks/run.py`` (or directly
+when run as a script).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # make `python benchmarks/bench_population.py` work without PYTHONPATH
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.local import LocalStrategy
+from repro.engine import (ClientSampling, Engine, FederatedData,
+                          HostFederatedData, PagedEngine)
+
+LAST_RECORDS = []
+
+COHORT = 16          # active clients per round (q·M), matched across the sweep
+FEAT, CLASSES, R = 8, 2, 8
+BATCH = 4
+
+
+def _host_data(M: int, seed: int = 0) -> HostFederatedData:
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(CLASSES, FEAT)).astype(np.float32) * 3
+    ys = rng.integers(0, CLASSES, size=(M, R)).astype(np.int32)
+    xs = protos[ys] + rng.normal(size=(M, R, FEAT)).astype(np.float32) * 0.4
+    # the throughput runs never evaluate; tiny test stacks keep memory flat
+    return HostFederatedData(xs, ys, xs[:1], ys[:1])
+
+
+def _strategy() -> LocalStrategy:
+    return LocalStrategy(feat_dim=FEAT, num_classes=CLASSES, lr=0.5)
+
+
+def _rps(engine, data, rounds: int, repeats: int = 3) -> float:
+    key = jax.random.PRNGKey(7)
+
+    def go():
+        state, _ = engine.fit(data, rounds=rounds, key=key,
+                              batch_size=BATCH, evaluate=False)
+        jax.tree_util.tree_leaves(state)[0].block_until_ready()
+
+    go()                                  # compile + warm plan/replay caches
+    best = float("inf")
+    for _ in range(repeats):              # best-of-N: 1-core shared box
+        t0 = time.perf_counter()
+        go()
+        best = min(best, time.perf_counter() - t0)
+    return rounds / best
+
+
+def run(quick: bool = True):
+    rows = []
+    LAST_RECORDS.clear()
+    rounds = 30 if quick else 60
+    sweep = (1_024, 16_384, 131_072) if quick else (1_024, 16_384, 131_072,
+                                                    1_048_576)
+
+    # the baseline the acceptance compares against: the resident engine at
+    # its current M=16 working point (all 16 clients active per round)
+    host16 = _host_data(16)
+    data16 = FederatedData(host16.train_x, host16.train_y,
+                           jnp.asarray(host16.test_x),
+                           jnp.asarray(host16.test_y))
+    resident_rps = _rps(Engine(_strategy(), eval_every=rounds), data16,
+                        rounds)
+    rows.append(("population_resident_M16_rps", 1e6 / resident_rps,
+                 round(resident_rps, 1)))
+    LAST_RECORDS.append(
+        {"name": "resident_engine", "M": 16, "cohort": 16,
+         "rounds_per_sec": round(resident_rps, 2), "rounds": rounds,
+         "feat": FEAT, "batch": BATCH})
+    print(f"[population] resident M=16 baseline: {resident_rps:.1f} r/s",
+          flush=True)
+
+    for M in sweep:
+        host = _host_data(M)
+        eng = PagedEngine(_strategy(), eval_every=rounds,
+                          schedule=ClientSampling(q=COHORT / M, mode="fixed"))
+        paged_rps = _rps(eng, host, rounds)
+        pop_mb = eng._pop.nbytes / 2**20
+        data_mb = (host.train_x.nbytes + host.train_y.nbytes) / 2**20
+        ratio = paged_rps / resident_rps
+        rows.append((f"population_paged_M{M}_rps", 1e6 / paged_rps,
+                     round(paged_rps, 1)))
+        LAST_RECORDS.append(
+            {"name": "paged_engine", "M": M, "cohort": COHORT,
+             "rounds_per_sec": round(paged_rps, 2), "rounds": rounds,
+             "feat": FEAT, "batch": BATCH,
+             "population_state_mb": round(pop_mb, 2),
+             "host_data_mb": round(data_mb, 2),
+             "prefetch_stats": dict(eng._prefetcher.stats),
+             "vs_resident_M16": round(ratio, 3)})
+        print(f"[population] paged M={M}: {paged_rps:.1f} r/s "
+              f"({ratio:.2f}x the resident M=16 baseline; "
+              f"state {pop_mb:.1f} MB + data {data_mb:.1f} MB host-side)",
+              flush=True)
+
+    biggest = LAST_RECORDS[-1]
+    LAST_RECORDS.append(
+        {"name": "acceptance", "criterion": "paged rps at max M >= resident "
+         "rps at M=16", "M": biggest["M"],
+         "passed": bool(biggest["rounds_per_sec"] >= resident_rps),
+         "paged_overhead_ms_per_round": round(
+             1e3 / biggest["rounds_per_sec"], 2),
+         "resident_ms_per_round": round(1e3 / resident_rps, 3),
+         "note": "the bit-exact paged ≡ resident contract draws every "
+         "per-client PRNG stream at full population size and slices at the "
+         "cohort's global ids, so each round pays O(M) threefry work (key "
+         "split, batch-index draw, participation draw) even with a 16-wide "
+         "cohort — the measured floor above. Strict parity with the toy "
+         "resident M=16 round needs O(cohort) streams (counter-sliced "
+         "threefry or fold_in-by-id), which are layout-invariant but not "
+         "bit-exact with the resident engine; see README §Virtual clients "
+         "& cohort paging."})
+    return rows
+
+
+def main() -> None:
+    import json
+    quick = "--full" not in sys.argv[1:]
+    rows = run(quick=quick)
+    payload = {"platform": jax.default_backend(), "quick": quick,
+               "entries": LAST_RECORDS}
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_population.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[population] wrote {out}", flush=True)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@
   bench_engine         (framework)     scan round loop vs legacy Python loop
   bench_schedule       (framework)     round schedules vs the PR-2 loop
   bench_topology       (framework)     gossip loop vs graph family/density
+  bench_population     (framework)     paged rounds/sec vs virtual M
   bench_resilience     (framework)     accuracy/overhead vs fault regime
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
@@ -37,14 +38,15 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
-                            bench_kernels, bench_overhead, bench_privacy,
-                            bench_resilience, bench_roofline, bench_schedule,
-                            bench_topology)
+                            bench_kernels, bench_overhead, bench_population,
+                            bench_privacy, bench_resilience, bench_roofline,
+                            bench_schedule, bench_topology)
     suites = {
         "kernels": bench_kernels,
         "engine": bench_engine,
         "schedule": bench_schedule,
         "topology": bench_topology,
+        "population": bench_population,
         "resilience": bench_resilience,
         "overhead": bench_overhead,
         "roofline": bench_roofline,

@@ -128,6 +128,21 @@ class DPDSGTStrategy(Strategy):
                                        y_new, g_new, state["g"])
         return {"x": x_new, "y": y_new, "g": g_new}, {}
 
+    def paged_local_update(self, state, xs, ys, r, key, pctx):
+        """Cohort-paged gossip round: the same call sequence as
+        ``local_update`` with the mixes resolving neighbor reads through the
+        cohort slot map (the planner paged in every participant's
+        in-neighbors) and gradients keyed by the global key split's cohort
+        slice — participant rows are bit-identical to the resident step."""
+        x_new = self.mix_paged(state["x"], r, key, pctx)
+        x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
+                                       x_new, state["y"])
+        g_new = self._grads_keyed(x_new, xs, ys, pctx.cohort_keys(key))
+        y_new = self.mix_paged(state["y"], r, key, pctx)
+        y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
+                                       y_new, g_new, state["g"])
+        return {"x": x_new, "y": y_new, "g": g_new}, {}
+
     def sharded_prefetch(self, state, ctx):
         """Issue the next round's boundary-row ppermutes from the end-of-
         round state (x and y are mixed at round start, so the rows a shard

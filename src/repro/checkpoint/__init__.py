@@ -1,4 +1,8 @@
 from repro.checkpoint.checkpoint import (CheckpointError,
                                          load_checkpoint_metadata,
-                                         latest_step, restore_checkpoint,
-                                         save_checkpoint, verify_checkpoint)
+                                         latest_step, population_chain_ok,
+                                         restore_checkpoint,
+                                         restore_population, save_checkpoint,
+                                         save_population, verified_steps,
+                                         verify_checkpoint,
+                                         verify_population)

@@ -163,6 +163,183 @@ def load_checkpoint_metadata(directory: str, step: int) -> Optional[dict]:
         return None
 
 
+# ---------------------------------------------------------------------------
+# Incremental population checkpoints (PagedEngine's host-resident client
+# store). A full (M, ...) snapshot every ``full_every`` saves, dirty-row
+# deltas in between: pop_<step>.npz holds one entry per population leaf
+# ("a0", "a1", ...) restricted to the rows touched since the previous save
+# (plus "__rows__"), and the pop_<step>.json sidecar records the delta's
+# base step, so restore walks base-chain to the newest full snapshot and
+# replays deltas oldest→newest — bit-exact regardless of the restoring run's
+# init values, because the full snapshot covers every row.
+#
+# Durability: same atomic-write + CRC sidecar dance as the plain checkpoint.
+# The ENGINE writes the population before the plain ckpt npz, making the
+# ckpt the commit point — resume walks ``verified_steps`` newest-first and
+# takes the first whose ``population_chain_ok`` also holds, so a SIGKILL
+# between the two writes falls back to the previous durable pair.
+# ---------------------------------------------------------------------------
+
+
+def _pop_npz_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"pop_{step:08d}.npz")
+
+
+def _pop_json_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"pop_{step:08d}.json")
+
+
+def _pop_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.match(r"pop_(\d+)\.npz$", f)))
+
+
+def _pop_meta(directory: str, step: int) -> Optional[dict]:
+    jpath = _pop_json_path(directory, step)
+    if not os.path.isfile(jpath):
+        return None
+    try:
+        with open(jpath) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+
+
+def verify_population(directory: str, step: int) -> bool:
+    """One population file verifies against its CRC sidecar."""
+    path = _pop_npz_path(directory, step)
+    meta = _pop_meta(directory, step)
+    if meta is None or not os.path.isfile(path):
+        return False
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return False
+    return (len(data) == meta.get("nbytes", len(data))
+            and zlib.crc32(data) == meta.get("checksum"))
+
+
+def _pop_chain(directory: str, step: int):
+    """Steps full-snapshot→...→step, or None if the chain is broken (a file
+    missing, torn, or a base loop)."""
+    chain, seen = [], set()
+    cur = step
+    while cur is not None:
+        if cur in seen or not verify_population(directory, cur):
+            return None
+        seen.add(cur)
+        chain.append(cur)
+        meta = _pop_meta(directory, cur)
+        if meta.get("full"):
+            return list(reversed(chain))
+        cur = meta.get("base")
+    return None   # ran off the chain without hitting a full snapshot
+
+
+def population_chain_ok(directory: str, step: int) -> bool:
+    """True when the population at ``step`` is restorable — either the delta
+    chain back to a full snapshot verifies, or the run has no population
+    files at all (strategies with no client-stacked leaves)."""
+    if not _pop_steps(directory):
+        return True
+    return _pop_chain(directory, step) is not None
+
+
+def save_population(directory: str, step: int, pop, keep_last: int = 0,
+                    full_every: int = 8):
+    """Save the population incrementally: dirty rows as a delta on the
+    previous save, or a full snapshot when there is no prior verified save
+    or the delta chain has reached ``full_every`` links. Clears the
+    population's dirty tracking on success."""
+    os.makedirs(directory, exist_ok=True)
+    prev = None
+    for s in reversed(_pop_steps(directory)):
+        if s < step and verify_population(directory, s):
+            prev = s
+            break
+    depth = None
+    if prev is not None:
+        pmeta = _pop_meta(directory, prev)
+        depth = pmeta.get("depth", 0 if pmeta.get("full") else None)
+    full = depth is None or depth + 1 >= max(int(full_every), 1)
+    buf = io.BytesIO()
+    if full:
+        np.savez(buf, **{f"a{i}": a for i, a in enumerate(pop.arrays)})
+        rows = pop.M
+    else:
+        dirty = pop.dirty_rows()
+        np.savez(buf, __rows__=dirty.astype(np.int64),
+                 **{f"a{i}": a[dirty] for i, a in enumerate(pop.arrays)})
+        rows = int(len(dirty))
+    data = buf.getvalue()
+    path = _pop_npz_path(directory, step)
+    _atomic_write(path, data)
+    meta = {"step": int(step), "full": bool(full),
+            "base": None if full else int(prev),
+            "depth": 0 if full else int(depth) + 1,
+            "rows": int(rows), "leaves": len(pop.arrays),
+            "checksum": zlib.crc32(data), "nbytes": len(data)}
+    _atomic_write(_pop_json_path(directory, step), json.dumps(meta).encode())
+    pop.clear_dirty()
+    if keep_last and keep_last > 0:
+        # retain every file REACHABLE from the newest keep_last saves' chains
+        # (deleting a delta's base would orphan the whole suffix)
+        steps = _pop_steps(directory)
+        reachable = set()
+        for s in steps[-keep_last:]:
+            reachable.update(_pop_chain(directory, s) or [s])
+        for s in steps:
+            if s not in reachable:
+                for p in (_pop_npz_path(directory, s),
+                          _pop_json_path(directory, s)):
+                    try:
+                        os.remove(p)
+                    except OSError:
+                        pass
+    return path
+
+
+def restore_population(directory: str, pop, step: int) -> None:
+    """Rebuild the population at ``step`` in place: apply the full snapshot
+    then every delta along the chain, oldest→newest. Raises
+    ``CheckpointError`` when the chain is broken."""
+    chain = _pop_chain(directory, step)
+    if chain is None:
+        raise CheckpointError(
+            f"population chain for step {step} in {directory} is broken "
+            "(missing, torn, or pruned base)")
+    for s in chain:
+        meta = _pop_meta(directory, s)
+        if meta.get("leaves", len(pop.arrays)) != len(pop.arrays):
+            raise CheckpointError(
+                f"population file {s} has {meta.get('leaves')} leaves, "
+                f"expected {len(pop.arrays)}")
+        with np.load(_pop_npz_path(directory, s)) as data:
+            if meta.get("full"):
+                for i, a in enumerate(pop.arrays):
+                    src = data[f"a{i}"]
+                    if src.shape != a.shape:
+                        raise CheckpointError(
+                            f"population leaf a{i} at step {s} has shape "
+                            f"{src.shape}, expected {a.shape}")
+                    a[...] = src.astype(a.dtype)
+            else:
+                rows = data["__rows__"]
+                for i, a in enumerate(pop.arrays):
+                    a[rows] = data[f"a{i}"].astype(a.dtype)
+    pop.clear_dirty()
+    pop.version += 1
+
+
+def verified_steps(directory: str):
+    """All steps (ascending) whose PLAIN checkpoint verifies — candidates
+    for paged resume, to be filtered by ``population_chain_ok``."""
+    return [s for s in _all_steps(directory) if verify_checkpoint(directory, s)]
+
+
 def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None):
     """Restore into the structure of ``template`` (shape/dtype enforced).
     Raises ``CheckpointError`` on corruption and ``ValueError`` naming the

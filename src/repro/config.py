@@ -235,6 +235,8 @@ class KernelConfig:
     dp_clip_tile: Tuple[int, int] = (0, 0)    # (tb, td)
     l1_tile: Tuple[int, int] = (0, 0)         # (tm, td)
     dp_round_tile: int = 0                    # tf; 0 => autotune/default
+    mix_halo_tile: int = 0                    # halo-mix row block; 0 => auto
+                                              # (untiled unless tuned better)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,9 @@ from repro.engine.loop import (CHUNK_STATS, Engine, History,
 from repro.engine.schedule import (AsyncStaleness, ClientSampling,
                                    FullParticipation, RoundSchedule,
                                    make_schedule)
+from repro.engine.population import (CohortPrefetcher, HostFederatedData,
+                                     PagedCtx, PagedEngine,
+                                     VirtualPopulation, as_host_data)
 from repro.engine.sharded import ClientShardCtx, ShardedEngine
 from repro.engine.strategy import (FederatedData, Strategy,
                                    available_strategies, get_strategy,

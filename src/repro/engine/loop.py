@@ -230,6 +230,40 @@ class Engine:
         checkpointing, and the value ``fit`` returns."""
         return state
 
+    # ------------------------------------------------- checkpointing seams
+    # (PagedEngine splits the save across a plain npz for the non-paged
+    #  remainder plus an incremental dirty-row population chain, and resume
+    #  must land on a step whose WHOLE set verifies — hence three seams.)
+
+    def _latest_resume_step(self) -> Optional[int]:
+        from repro.checkpoint import latest_step
+        return latest_step(self.checkpoint_dir)
+
+    def _restore_for_resume(self, state, data: FederatedData,
+                            resume_step: int):
+        """Restore ``resume_step`` into the engine-internal representation.
+        Returns (state, resume_step, history-dict-or-None)."""
+        from repro.checkpoint import (load_checkpoint_metadata,
+                                      restore_checkpoint)
+        saved, resume_step = restore_checkpoint(
+            self.checkpoint_dir,
+            self.strategy.state_to_save(self._finalize_state(state)),
+            resume_step)
+        state = self._prepare_state(saved, data)
+        meta = load_checkpoint_metadata(self.checkpoint_dir, resume_step)
+        return state, resume_step, (meta or {}).get("history")
+
+    def _save_checkpoint(self, ev: int, state, history: "History") -> None:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(self.checkpoint_dir, ev,
+                        self.strategy.state_to_save(
+                            self._finalize_state(state)),
+                        metadata={"history": {
+                            "rounds": history.rounds,
+                            "accuracy": history.accuracy,
+                            "metrics": history.metrics}},
+                        keep_last=self.checkpoint_keep)
+
     # ------------------------------------------------------------------
     def fit(self, data: FederatedData, *, rounds: int, key,
             batch_size: Optional[int] = None, start_round: int = 0,
@@ -260,8 +294,7 @@ class Engine:
         # the calibrated value
         resume_step = None
         if resume and self.checkpoint_dir:
-            from repro.checkpoint import latest_step
-            resume_step = latest_step(self.checkpoint_dir)
+            resume_step = self._latest_resume_step()
         if resume_step is not None and self.ledger is not None:
             # the rounds skipped by the resume were spent by the pre-restart
             # run — an accountant that forgot them would under-report the
@@ -281,20 +314,13 @@ class Engine:
             state = strategy.init(init_key, data, batch_size)
         state = self._prepare_state(state, data)
         if resume_step is not None:
-            from repro.checkpoint import (load_checkpoint_metadata,
-                                          restore_checkpoint)
-            saved, resume_step = restore_checkpoint(
-                self.checkpoint_dir,
-                strategy.state_to_save(self._finalize_state(state)),
-                resume_step)
-            state = self._prepare_state(saved, data)
+            state, resume_step, h = self._restore_for_resume(state, data,
+                                                             resume_step)
             start_round = resume_step + 1
             # the sidecar carries the killed run's History: restoring it makes
             # the resumed record bit-exact with an uninterrupted run (floats
             # round-trip exactly through JSON's shortest-repr)
-            meta = load_checkpoint_metadata(self.checkpoint_dir, resume_step)
-            if meta and "history" in meta and not history.rounds:
-                h = meta["history"]
+            if h and not history.rounds:
                 history.rounds[:] = [int(x) for x in h.get("rounds", [])]
                 history.accuracy[:] = [float(x) for x in h.get("accuracy", [])]
                 history.metrics.clear()
@@ -333,15 +359,7 @@ class Engine:
                 chunk_means.update(self.ledger.metrics())
             history.record(ev, jnp.mean(acc), chunk_means)
             if self.checkpoint_dir:
-                from repro.checkpoint import save_checkpoint
-                save_checkpoint(self.checkpoint_dir, ev,
-                                strategy.state_to_save(
-                                    self._finalize_state(state)),
-                                metadata={"history": {
-                                    "rounds": history.rounds,
-                                    "accuracy": history.accuracy,
-                                    "metrics": history.metrics}},
-                                keep_last=self.checkpoint_keep)
+                self._save_checkpoint(ev, state, history)
         if cursor < rounds:  # tail (or the whole phase when evaluate=False)
             state, _, aux = self.run_rounds(state, data, phase_key, cursor,
                                             rounds, batch_size)

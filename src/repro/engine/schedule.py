@@ -201,8 +201,15 @@ class ClientSampling(RoundSchedule):
         k1, _ = jax.random.split(key)
         if self.mode == "fixed":
             k = max(1, int(round(self.q * M)))
-            order = jnp.argsort(jax.random.uniform(k1, (M,)))
-            return jnp.zeros((M,), jnp.float32).at[order[:k]].set(1.0)
+            # top_k of the negated uniforms = the k smallest = the stable
+            # argsort's first k rows (both break ties lower-index-first), so
+            # the mask is bit-identical to the argsort lowering — but O(M·k)
+            # instead of a full O(M log M) sort, which is what makes fixed
+            # cohorts affordable per round at virtual-population M (the
+            # paged engine draws and host-replays this at full M)
+            u = jax.random.uniform(k1, (M,))
+            _, idx = jax.lax.top_k(-u, k)
+            return jnp.zeros((M,), jnp.float32).at[idx].set(1.0)
         return (jax.random.uniform(k1, (M,)) < self.q).astype(jnp.float32)
 
     def round_body(self, strategy, batch_size):
@@ -229,6 +236,37 @@ class ClientSampling(RoundSchedule):
             # (stacked strategies are already frozen by the merges; this
             # guards server-style states whose cohort-weighted aggregation
             # has no cohort to weight)
+            empty = jnp.sum(mask) == 0
+            state = jax.tree_util.tree_map(
+                lambda s, n: jnp.where(empty, s, n), state, new)
+            return state, (metrics, {"participation": mask})
+
+        return body
+
+    def paged_round_body(self, strategy, batch_size, pctx):
+        """Round body over a paged cohort (``repro.engine.population``): the
+        chunk's arrays hold the compact (C, ...) cohort rows, but every random
+        draw is made at full population size — the (M,) participation mask,
+        the M-way per-client key split, the (M, B) batch-index draw — and then
+        sliced at the cohort's global ids, so the streams (and the aux
+        participation masks the ledger and byte accounting consume) are
+        bit-identical to the resident body's."""
+        def body(state, r, phase_key, train_x, train_y):
+            rk = jax.random.fold_in(phase_key, r)
+            xs, ys = pctx.sample_cohort_batches(
+                train_x, train_y, jax.random.fold_in(rk, 0), batch_size)
+            mask = self.draw_mask(jax.random.fold_in(rk, 3), pctx.M)
+            af = current_faults()
+            if af is not None:
+                mask = mask * af.real.active()
+            # cohort-slot view of the full mask; padding slots never merge
+            mask_c = mask[pctx.ids_clip] * pctx.valid
+            new, metrics = strategy.paged_local_update(
+                state, xs, ys, r, jax.random.fold_in(rk, 1), pctx)
+            new = strategy.merge_participation(state, new, mask_c)
+            new = strategy.paged_aggregate_masked(
+                new, r, jax.random.fold_in(rk, 2), mask, pctx)
+            new = strategy.merge_participation(state, new, mask_c)
             empty = jnp.sum(mask) == 0
             state = jax.tree_util.tree_map(
                 lambda s, n: jnp.where(empty, s, n), state, new)

@@ -248,15 +248,17 @@ class Strategy:
         return state
 
     # ------------------------------------------------------------- topology
-    def set_topology(self, topology) -> None:
+    def set_topology(self, topology, kernels=None) -> None:
         """Install a communication graph (``repro.topology``): the mixing
         plan is compiled once host-side and the traced ``mix``/``mix_sharded``
         hooks below apply it per round. Changes the traced computation, so
         compiled chunks are invalidated; ``None`` restores the strategy's
-        built-in pattern."""
+        built-in pattern. ``kernels`` (a ``KernelConfig``) opts the halo mix
+        step into the dispatch autotuner's row-tile search."""
         from repro.topology.mixing import make_plan
         self.topology = topology
-        self._mix_plan = None if topology is None else make_plan(topology)
+        self._mix_plan = (None if topology is None
+                          else make_plan(topology, kernels=kernels))
         self.cache_token += 1
 
     def mix(self, stacked_tree, r, key):
@@ -349,6 +351,64 @@ class Strategy:
         full = ctx.gather(state)
         return ctx.scatter_like(self.aggregate_masked(full, r, key, mask),
                                 full)
+
+    # --------------------------------------------------------- paged cohorts
+    # These hooks run inside a PagedEngine chunk (``repro.engine.population``):
+    # ``state``/``xs``/``ys`` hold the cohort's compact (C, ...) rows and
+    # ``pctx`` is the PagedCtx mapping cohort slots to global client ids.
+    # Defaults are bit-exact with the resident path by construction: per-client
+    # randomness comes from the *global* M-way key split (layout-invariant),
+    # and cohort aggregation scatter-expands to the full (M, ...) stack so the
+    # resident reduction runs verbatim (identical float rounding).
+
+    def paged_local_update(self, state, xs, ys, r, key, pctx):
+        """Local update on the cohort's rows. Default: slice the global
+        per-client key split at the cohort's ids and reduce metrics over the
+        valid (non-padding) slots."""
+        state, per_client = self.local_update_keyed(
+            state, xs, ys, r, pctx.cohort_keys(key))
+        return state, pctx.metric_means(per_client)
+
+    def mix_paged(self, tree_c, r, key, pctx):
+        """Paged twin of ``mix``: the same per-row gossip arithmetic with
+        neighbor reads resolved through the cohort's slot map. The cohort
+        planner closed the cohort over in-neighbors
+        (``paged_cohort_closure``), so every participant row reads exactly
+        the values the resident step reads."""
+        if self._mix_plan is None:
+            return tree_c
+        from repro.resilience import current_faults
+        from repro.topology.mixing import mix_stacked_paged
+        af = current_faults()
+        keep = None if af is None else af.real.keep
+        return mix_stacked_paged(tree_c, self._mix_plan, r, key, pctx,
+                                 keep=keep)
+
+    def paged_aggregate_masked(self, state, r, key, mask, pctx):
+        """Cohort aggregation under a sampling schedule: ``mask`` is the full
+        (M,) participation mask (the paged body draws the identical full-M
+        mask the resident body draws). Default: scatter-expand the compact
+        rows into a zeros-backed (M, ...) stack, run the resident
+        ``aggregate_masked`` verbatim, take the cohort rows back. Absent
+        clients contribute exact zero terms either way, so the reduction is
+        bit-identical up to the sign of zero."""
+        if (type(self).aggregate is Strategy.aggregate
+                and type(self).aggregate_masked is Strategy.aggregate_masked):
+            # merge_participation(state, identity(state)) == state bitwise
+            return state
+        full = pctx.expand(state)
+        return pctx.compact_like(self.aggregate_masked(full, r, key, mask),
+                                 full)
+
+    def paged_cohort_closure(self, ids, rounds):
+        """Host-side: global client ids a chunk must page in beyond the
+        sampled participants — the union with every participant's in-neighbors
+        under the configured mixing plan (a participant's gossip step reads
+        its neighbors' last-known state). ``ids``/``rounds`` are numpy."""
+        if self._mix_plan is None:
+            return ids
+        from repro.topology.mixing import plan_in_neighbors
+        return plan_in_neighbors(self._mix_plan, ids, rounds)
 
     # ------------------------------------------------- partial participation
     def merge_participation(self, prev_state, new_state, mask):

@@ -175,6 +175,58 @@ def dp_round_tiles(shape: Tuple[int, int, int], dtype, cfg: KernelConfig,
                     trials=cfg.autotune_trials)
 
 
+def _mix_halo_candidates(m: int):
+    """Row-block widths for the halo mix-step arithmetic; (0,) is the
+    untiled lowering (today's default) and always a candidate."""
+    return [(0,)] + [(tm,) for tm in (8, 16, 32, 64, 128) if tm < m]
+
+
+def _halo_mix_probe(buf, idx, s, w, tm: int):
+    """The halo mix step's per-row arithmetic on a receive buffer, blocked
+    in rows of ``tm`` (0 = untiled) — the shape the autotuner times. Row
+    arithmetic is row-independent, so every tile width is bit-identical;
+    only the lowering changes."""
+    m = idx.shape[0]
+    t = buf[:m]
+
+    def block(sl):
+        acc = s[sl, None] * t[sl]
+        for k in range(idx.shape[1]):
+            acc = acc + w[sl, k:k + 1] * buf[idx[sl, k]]
+        return acc
+
+    if tm <= 0 or tm >= m:
+        return block(slice(None))
+    return jnp.concatenate([block(slice(i0, min(i0 + tm, m)))
+                            for i0 in range(0, m, tm)], axis=0)
+
+
+def mix_halo_tiles(shape: Tuple[int, int, int, int], dtype,
+                   cfg: KernelConfig, backend: str) -> Tuple[int]:
+    """shape = (m, H, degree, feat): local rows, halo rows, neighbor slots,
+    flattened trailing size of the mixed leaf. Same policy as the other
+    dispatchers: explicit tile bypasses, non-pallas/no-autotune takes the
+    static default (untiled, i.e. the pre-autotune lowering), otherwise the
+    cached search runs once per (shape, dtype, backend)."""
+    if cfg.mix_halo_tile != 0:
+        return (cfg.mix_halo_tile,)
+    if backend != "pallas" or not cfg.autotune:
+        return (0,)
+    m, H, d, f = shape
+
+    def time_fn(cand):
+        (tm,) = cand
+        buf = jnp.zeros((m + H, f), dtype)
+        idx = jnp.zeros((m, max(d, 1)), jnp.int32)
+        s = jnp.ones((m,), dtype)
+        w = jnp.zeros((m, max(d, 1)), dtype)
+        return _timed(lambda b: _halo_mix_probe(b, idx, s, w, tm), buf)
+
+    return autotune("mix_halo", shape, dtype, backend,
+                    _mix_halo_candidates(m), time_fn,
+                    trials=cfg.autotune_trials)
+
+
 def l1_tiles(shape: Tuple[int, int], dtype, cfg: KernelConfig,
              backend: str) -> Tuple[int, int]:
     if cfg.l1_tile != (0, 0):

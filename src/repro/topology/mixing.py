@@ -141,13 +141,16 @@ class MixPlan:
     ring: bool                    # shard-aligned halo exchange eligible
     drop_prob: float
     churn_prob: float
+    # optional KernelConfig: opts the halo mix step's row blocking into the
+    # dispatch autotuner (None => always the untiled lowering)
+    kernels: Optional[object] = None
 
     @property
     def faulty(self) -> bool:
         return self.drop_prob > 0.0 or self.churn_prob > 0.0
 
 
-def make_plan(topology) -> MixPlan:
+def make_plan(topology, kernels=None) -> MixPlan:
     """Compile a (possibly time-varying) topology into a MixPlan."""
     topos = getattr(topology, "topologies", None) or [topology]
     M = topos[0].M
@@ -183,7 +186,8 @@ def make_plan(topology) -> MixPlan:
                    nbr_np=nbr, nbr_w_np=nbr_w, self_w_np=self_w,
                    uniform=uniform, ring=ring,
                    drop_prob=float(getattr(topology, "drop_prob", 0.0)),
-                   churn_prob=float(getattr(topology, "churn_prob", 0.0)))
+                   churn_prob=float(getattr(topology, "churn_prob", 0.0)),
+                   kernels=kernels)
 
 
 def _round_slice(arr: np.ndarray, r, period: int):
@@ -261,6 +265,70 @@ def mix_stacked(tree, plan: MixPlan, r=0, key=None, keep=None):
         acc = s_row.reshape(ex) * t
         for k in range(plan.degree):
             acc = acc + w_row[:, k].reshape(ex) * t[nbr[:, k]]
+        return acc.astype(t.dtype)
+
+    return jax.tree_util.tree_map(mix_g, tree)
+
+
+def plan_in_neighbors(plan: MixPlan, ids, rounds):
+    """Host-side cohort closure: ``ids`` plus every positive-weight
+    in-neighbor those rows read in any of ``rounds``'s period slices.
+    Fault realizations only *remove* edges, so this is always a superset of
+    the rows a realized chunk actually reads."""
+    ids = np.asarray(ids, np.int64)
+    if plan.degree == 0 or plan.M <= 1 or ids.size == 0:
+        return ids
+    if plan.period == 1:
+        ts = [0]
+    else:
+        ts = sorted({int(r) % plan.period for r in np.asarray(rounds)})
+    out = set(ids.tolist())
+    for t in ts:
+        nbr = plan.nbr_np[t][ids]
+        live = plan.nbr_w_np[t][ids] > 0
+        out.update(int(j) for j in nbr[live].ravel())
+    return np.asarray(sorted(out), np.int64)
+
+
+def mix_stacked_paged(tree, plan: MixPlan, r, key, pctx, keep=None):
+    """Paged twin of ``mix_stacked``: one gossip round on a compact cohort
+    (C, ...) pytree. Each cohort row applies the SAME per-row expression the
+    resident step applies to its global row — neighbor reads are resolved
+    through ``pctx.slot_of`` (global id → cohort slot), and fault-adjusted
+    row weights are computed at full M (replicated arithmetic) then sliced at
+    the cohort's rows — so participant rows are bit-identical to the resident
+    mix (two-term float adds are bitwise commutative, which covers the
+    resident ring's roll-based lowering). Rows whose neighbors fall outside
+    the cohort read finite garbage (slot 0); the cohort planner guarantees
+    those rows are non-participants, whose mixed values the schedule's
+    ``merge_participation`` discards."""
+    import jax
+    import jax.numpy as jnp
+    if plan.degree == 0 or plan.M <= 1:
+        return tree
+    nbr = _round_slice(plan.nbr_np, r, plan.period)      # (M, d) global ids
+    rows = pctx.ids_clip                                 # (C,) global ids
+    slot = pctx.slot_of[nbr[rows]]                       # (C, d) cohort slots
+
+    if plan.uniform is not None and not plan.faulty and keep is None:
+        s, w = plan.uniform
+
+        def mix_u(t):
+            acc = t[slot[:, 0]]
+            for k in range(1, plan.degree):
+                acc = acc + t[slot[:, k]]
+            return s * t + w * acc
+
+        return jax.tree_util.tree_map(mix_u, tree)
+
+    s_full, w_full = _fault_adjusted_rows(plan, nbr, r, key, keep=keep)
+    s_row, w_row = s_full[rows], w_full[rows]
+
+    def mix_g(t):
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        acc = s_row.reshape(ex) * t
+        for k in range(plan.degree):
+            acc = acc + w_row[:, k].reshape(ex) * t[slot[:, k]]
         return acc.astype(t.dtype)
 
     return jax.tree_util.tree_map(mix_g, tree)
@@ -423,6 +491,29 @@ def halo_start(tree, plan: MixPlan, ctx):
         lambda t: _halo_exchange(t, sched, ctx), tree)
 
 
+def _halo_tile(plan: MixPlan, ctx, t, sched) -> int:
+    """Row-block width for the halo mix arithmetic on leaf ``t`` — resolved
+    through the dispatch autotuner's cached search when the plan carries a
+    KernelConfig (``make_plan(topology, kernels=...)``), untiled otherwise.
+    Every width is bit-identical (per-row arithmetic); only the lowering's
+    gather granularity changes."""
+    if plan.kernels is None:
+        return 0
+    from repro.kernels.dispatch import mix_halo_tiles, resolve_backend
+    feat = int(np.prod(t.shape[1:])) if t.ndim > 1 else 1
+    (tm,) = mix_halo_tiles((ctx.m, sched.H, plan.degree, feat), t.dtype,
+                           plan.kernels, resolve_backend(plan.kernels.backend))
+    return int(tm)
+
+
+def _row_blocks(m: int, tm: int):
+    """Static row slices: one full slice when untiled, else ``tm``-row
+    blocks (last one ragged)."""
+    if tm <= 0 or tm >= m:
+        return [slice(None)]
+    return [slice(i0, min(i0 + tm, m)) for i0 in range(0, m, tm)]
+
+
 def _halo_mix(tree, plan: MixPlan, r, key, ctx, keep=None, halo=None):
     """Gather-free sparse mix: ppermute only the boundary rows the schedule
     derived, then run the single-device per-row arithmetic against the
@@ -430,7 +521,10 @@ def _halo_mix(tree, plan: MixPlan, r, key, ctx, keep=None, halo=None):
     slot-accumulation order, so the result matches the single-device step to
     the commutativity of each two-term float add. ``halo`` is an optional
     prefetched halo-block tree (issued by ``halo_start`` at the end of the
-    previous round body — the double-buffered overlap path)."""
+    previous round body — the double-buffered overlap path). The per-row
+    arithmetic runs in row blocks sized by the dispatch autotuner when the
+    plan carries a KernelConfig (``_halo_tile``); the untiled default is
+    today's lowering, verbatim."""
     import jax
     import jax.numpy as jnp
     sched = halo_schedule(plan, ctx)
@@ -448,10 +542,18 @@ def _halo_mix(tree, plan: MixPlan, r, key, ctx, keep=None, halo=None):
 
         def mix_u(t, hblock):
             buf = jnp.concatenate([t, hblock], axis=0)
-            acc = buf[local_idx[:, 0]]
-            for k in range(1, plan.degree):
-                acc = acc + buf[local_idx[:, k]]
-            return s * t + w * acc
+
+            def block(sl):
+                acc = buf[local_idx[sl, 0]]
+                for k in range(1, plan.degree):
+                    acc = acc + buf[local_idx[sl, k]]
+                return s * t[sl] + w * acc
+
+            blocks = [block(sl)
+                      for sl in _row_blocks(t.shape[0],
+                                            _halo_tile(plan, ctx, t, sched))]
+            return blocks[0] if len(blocks) == 1 else jnp.concatenate(
+                blocks, axis=0)
 
         return apply(mix_u)
 
@@ -468,10 +570,18 @@ def _halo_mix(tree, plan: MixPlan, r, key, ctx, keep=None, halo=None):
     def mix_g(t, hblock):
         buf = jnp.concatenate([t, hblock], axis=0)
         ex = (-1,) + (1,) * (t.ndim - 1)
-        acc = s_row.reshape(ex) * t
-        for k in range(d):
-            acc = acc + w_row[:, k].reshape(ex) * buf[local_idx[:, k]]
-        return acc.astype(t.dtype)
+
+        def block(sl):
+            acc = s_row[sl].reshape(ex) * t[sl]
+            for k in range(d):
+                acc = acc + w_row[sl, k].reshape(ex) * buf[local_idx[sl, k]]
+            return acc.astype(t.dtype)
+
+        blocks = [block(sl)
+                  for sl in _row_blocks(t.shape[0],
+                                        _halo_tile(plan, ctx, t, sched))]
+        return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks,
+                                                                  axis=0)
 
     return apply(mix_g)
 

@@ -1,7 +1,7 @@
 """Crash-safety chaos harness, executed as a subprocess by
 ``tests/test_resilience.py``.
 
-Usage: ``python _chaos_resume_main.py <ckpt_dir> <mode> [faulted]``
+Usage: ``python _chaos_resume_main.py <ckpt_dir> <mode> [flags...]``
 
   baseline — uninterrupted fit over the whole horizon, print the record
   crash    — same fit, but every checkpoint save is followed by a short
@@ -9,10 +9,14 @@ Usage: ``python _chaos_resume_main.py <ckpt_dir> <mode> [faulted]``
              process mid-training (this mode never prints: it dies)
   resume   — ``fit(resume=True)`` from whatever the killed run left behind
 
-``faulted`` adds a correlated fault process, so the chaos tier also covers
-the fault-chain fast-forward on resume. Prints ONE JSON object with the
-History lists and a SHA-256 over the final state's leaves — the parent
-asserts resumed ≡ baseline bit-exactly.
+Flags: ``faulted`` adds a correlated fault process, so the chaos tier also
+covers the fault-chain fast-forward on resume. ``paged`` runs a
+``PagedEngine`` under client sampling — the population lives host-side and
+checkpoints incrementally (dirty-row deltas + periodic fulls), and the
+crash-mode sleeps also land kills BETWEEN a population save and its plain
+checkpoint commit point, covering torn incremental chains. Prints ONE JSON
+object with the History lists and a SHA-256 over the final state's leaves —
+the parent asserts resumed ≡ baseline bit-exactly.
 """
 from __future__ import annotations
 
@@ -26,28 +30,40 @@ ROUNDS, EVAL_EVERY, SEED = 30, 3, 0
 
 def main() -> None:
     ckpt_dir, mode = sys.argv[1], sys.argv[2]
-    faulted = len(sys.argv) > 3 and sys.argv[3] == "faulted"
+    flags = set(sys.argv[3:])
+    faulted = "faulted" in flags
+    paged = "paged" in flags
 
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.baselines.local import LocalStrategy
-    from repro.engine import Engine, FederatedData
+    from repro.engine import ClientSampling, Engine, FederatedData, PagedEngine
     from repro.resilience import FaultModel, make_fault_process
 
     if mode == "crash":
         # slow the saves down so the parent reliably lands its SIGKILL
-        # between two checkpoints (mid-chunk), never changing what is saved
+        # between two checkpoints (mid-chunk), never changing what is saved.
+        # the population save is slowed too, so some kills land between a
+        # population save and the plain-checkpoint commit point (a torn
+        # incremental chain the resume must skip past)
         import repro.checkpoint as ck
         orig = ck.save_checkpoint
+        orig_pop = ck.save_population
 
         def slow_save(*args, **kwargs):
             out = orig(*args, **kwargs)
             time.sleep(0.4)
             return out
 
+        def slow_pop_save(*args, **kwargs):
+            out = orig_pop(*args, **kwargs)
+            time.sleep(0.2)
+            return out
+
         ck.save_checkpoint = slow_save
+        ck.save_population = slow_pop_save
 
     rng = np.random.default_rng(SEED)
     M, feat, classes, n = 6, 12, 3, 32
@@ -64,8 +80,17 @@ def main() -> None:
         faults = make_fault_process(fm, M)
 
     strategy = LocalStrategy(feat_dim=feat, num_classes=classes, lr=0.5)
-    engine = Engine(strategy, eval_every=EVAL_EVERY, checkpoint_dir=ckpt_dir,
-                    faults=faults)
+    if paged:
+        # true compact-cohort paged body (client sampling) with the client
+        # population host-resident and incrementally checkpointed; a small
+        # full_every is implied by the save count (full_every=8 default vs
+        # 10 saves over the horizon => the chain re-roots mid-run)
+        engine = PagedEngine(strategy, eval_every=EVAL_EVERY,
+                             checkpoint_dir=ckpt_dir, faults=faults,
+                             schedule=ClientSampling(q=0.5))
+    else:
+        engine = Engine(strategy, eval_every=EVAL_EVERY,
+                        checkpoint_dir=ckpt_dir, faults=faults)
     state, hist = engine.fit(data, rounds=ROUNDS, key=jax.random.PRNGKey(SEED),
                              batch_size=8, resume=(mode == "resume"))
 

@@ -297,6 +297,88 @@ def main() -> None:
     compare("p4_fault_failover_gather", mk_p4(spanning),
             faults=lambda: make_fault_process(failover_fm, M))
 
+    # -------- paged cohorts: PagedEngine ≡ resident Engine (ISSUE 8) -------
+    # the host-resident population with paged cohorts must be bit-exact with
+    # the resident engine — state AND History — across every strategy ×
+    # schedule, including uneven cohort sizes (M=6, fixed-k and Bernoulli
+    # draws) and a correlated fault regime. P4's train-loss means under
+    # sampling are the one documented difference (cohort mean vs the
+    # resident's full-M mean) and are excluded, not asserted loosely.
+    from repro.engine.population import PagedEngine
+
+    def compare_paged(name, mk_strategy, schedule=None, data=data8, rounds=8,
+                      batch=8, faults=None, mesh=None, exclude_metrics=()):
+        mk_sched = schedule if schedule is not None else (lambda: None)
+        mk_faults = faults if faults is not None else (lambda: None)
+        st1, h1 = Engine(mk_strategy(), eval_every=3, schedule=mk_sched(),
+                         faults=mk_faults()).fit(
+            data, rounds=rounds, key=key, batch_size=batch)
+        st2, h2 = PagedEngine(mk_strategy(), eval_every=3,
+                              schedule=mk_sched(), faults=mk_faults(),
+                              mesh=mesh).fit(
+            data, rounds=rounds, key=key, batch_size=batch)
+        excl = set(exclude_metrics)
+        results[name] = {
+            "rounds_equal": h1.rounds == h2.rounds,
+            "accuracy_bit_equal": h1.accuracy == h2.accuracy,
+            "accuracy_maxdiff": float(max(abs(a - b) for a, b in
+                                          zip(h1.accuracy, h2.accuracy))),
+            "metrics_bit_equal": all(v == h2.metrics.get(k)
+                                     for k, v in h1.metrics.items()
+                                     if k not in excl),
+            "excluded_maxdiff": float(max(
+                (max(abs(p - q) for p, q in zip(h1.metrics[k], h2.metrics[k]))
+                 for k in excl), default=0.0)),
+            "state_bit_equal": tree_bit_equal(st1, st2),
+            "state_maxdiff": tree_maxdiff(st1, st2),
+        }
+
+    def mk_fedavg(sigma=0.4):
+        return lambda: FedAvgStrategy(feat_dim=feat, num_classes=classes,
+                                      lr=0.5, clip=1.0, sigma=sigma)
+
+    def mk_dsgt(topology=None):
+        return lambda: DPDSGTStrategy(feat_dim=feat, num_classes=classes,
+                                      lr=0.3, clip=1.0, sigma=0.4,
+                                      topology=topology)
+
+    compare_paged("paged_fedavg_full", mk_fedavg(0.5))
+    compare_paged("paged_fedavg_sampling_uneven", mk_fedavg(),
+                  schedule=lambda: ClientSampling(q=0.6), data=data6)
+    compare_paged("paged_fedavg_bernoulli", mk_fedavg(),
+                  schedule=lambda: ClientSampling(q=0.5, mode="bernoulli"))
+    compare_paged("paged_fedavg_async0", mk_fedavg(),
+                  schedule=lambda: AsyncStaleness(staleness=0))
+    compare_paged("paged_dsgt_full", mk_dsgt())
+    compare_paged("paged_dsgt_sampling", mk_dsgt(),
+                  schedule=lambda: ClientSampling(q=0.5))
+    compare_paged("paged_dsgt_sampling_uneven", mk_dsgt(),
+                  schedule=lambda: ClientSampling(q=0.5), data=data6)
+    compare_paged("paged_dsgt_async2", mk_dsgt(),
+                  schedule=lambda: AsyncStaleness(staleness=2))
+    # non-ring graph: the cohort closure pages in every in-neighbor and the
+    # paged mix resolves reads through the slot map's general path
+    compare_paged("paged_dsgt_expander_sampling", mk_dsgt(expander),
+                  schedule=lambda: ClientSampling(q=0.5))
+    compare_paged("paged_p4_full", mk_p4(spanning))
+    compare_paged("paged_p4_sampling", mk_p4(spanning),
+                  schedule=lambda: ClientSampling(q=0.5),
+                  exclude_metrics=("private_loss", "proxy_loss"))
+    compare_paged("paged_p4_async1", mk_p4(spanning),
+                  schedule=lambda: AsyncStaleness(staleness=1))
+    # correlated fault regime: the fault carry is host-replicated and full-M,
+    # the planned cohort is a superset of realized participants (faults only
+    # remove clients), so the paged run realizes the identical masks
+    compare_paged("paged_fedavg_sampling_faulty", mk_fedavg(),
+                  schedule=lambda: ClientSampling(q=0.6),
+                  faults=lambda: make_fault_process(
+                      FaultModel(node_fail=0.25, node_repair=0.4), M))
+    # cohort axis sharded over the clients mesh (GSPMD partitioning of the
+    # paged chunk): numerically tight, not bit-exact — partitioned
+    # reductions reassociate
+    compare_paged("paged_mesh_fedavg_sampling", mk_fedavg(),
+                  schedule=lambda: ClientSampling(q=0.6), mesh=mesh8)
+
     # ---------------- P4 end-to-end: bootstrap -> grouping -> co-train ------
     protos2 = rng.normal(size=(2, 4, 20)).astype(np.float32) * 2
     protos2[0, :, 10:] = 0

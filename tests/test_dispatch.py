@@ -339,3 +339,57 @@ def test_dp_round_sigma_without_key_raises(key):
     y = jnp.zeros((4,), jnp.int32)
     with pytest.raises(ValueError, match="PRNG key"):
         dispatch.dp_round(_linear_loss(), params, x, y, clip=1.0, sigma=0.5)
+
+
+# ---------------------------------------------------------------------------
+# halo mix-step row-block autotuning (million-client PR: paged cohorts make
+# m per shard small and variable, so the block width is tuned, not fixed)
+# ---------------------------------------------------------------------------
+
+def test_mix_halo_candidates_respect_row_count():
+    # (0,) — the untiled pre-autotune lowering — is always a candidate, and
+    # a block never covers the whole row range (that IS the untiled case)
+    assert dispatch._mix_halo_candidates(4) == [(0,)]
+    assert dispatch._mix_halo_candidates(8) == [(0,)]
+    assert dispatch._mix_halo_candidates(64) == [(0,), (8,), (16,), (32,)]
+    assert dispatch._mix_halo_candidates(256) == [
+        (0,), (8,), (16,), (32,), (64,), (128,)]
+
+
+def test_mix_halo_tiles_policy():
+    shape = (64, 16, 3, 128)
+    # explicit tile bypasses autotune entirely
+    cfg = KernelConfig(mix_halo_tile=16)
+    assert dispatch.mix_halo_tiles(shape, jnp.float32, cfg, "pallas") == (16,)
+    # non-pallas backends never autotune: untiled static default
+    cfg = KernelConfig()
+    assert dispatch.mix_halo_tiles(shape, jnp.float32, cfg, "ref") == (0,)
+    cfg = KernelConfig(autotune=False)
+    assert dispatch.mix_halo_tiles(shape, jnp.float32, cfg, "pallas") == (0,)
+
+
+def test_mix_halo_autotune_cached_per_shape():
+    dispatch.clear_autotune_cache()
+    cfg = KernelConfig(autotune=True, autotune_trials=1)
+    got = dispatch.mix_halo_tiles((32, 8, 2, 16), jnp.float32, cfg, "pallas")
+    assert got in dispatch._mix_halo_candidates(32)
+    again = dispatch.mix_halo_tiles((32, 8, 2, 16), jnp.float32, cfg,
+                                    "pallas")
+    assert again == got
+    assert dispatch.autotune_cache_stats()["hits"] >= 1
+
+
+def test_halo_mix_probe_tiled_bit_equal_to_untiled(key):
+    """Row blocking only changes the lowering — every tile width must give
+    bit-identical rows (the property that lets the tuned width vary freely
+    without breaking the sharded engine's bit-exactness contract)."""
+    m, H, d, f = 24, 6, 3, 10
+    buf = jax.random.normal(key, (m + H, f), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (m, d), 0, m + H)
+    s = jax.random.uniform(jax.random.fold_in(key, 2), (m,))
+    w = jax.random.normal(jax.random.fold_in(key, 3), (m, d)) * 0.1
+    ref = dispatch._halo_mix_probe(buf, idx, s, w, 0)
+    for tm in (1, 7, 8, 16, 24, 100):
+        np.testing.assert_array_equal(
+            np.asarray(dispatch._halo_mix_probe(buf, idx, s, w, tm)),
+            np.asarray(ref))

@@ -373,12 +373,12 @@ def test_resume_is_bit_exact_with_uninterrupted(toy, key, tmp_path, faulted):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
-@pytest.mark.parametrize("variant", ["plain", "faulted"])
+@pytest.mark.parametrize("variant", ["plain", "faulted", "paged"])
 def test_sigkill_resume_bit_exact(tmp_path, variant):
     script = os.path.join(os.path.dirname(__file__), "_chaos_resume_main.py")
     env = dict(os.environ, JAX_PLATFORMS="cpu",
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
-    extra = ["faulted"] if variant == "faulted" else []
+    extra = [] if variant == "plain" else [variant]
 
     base_dir = str(tmp_path / "base")
     p = subprocess.run([sys.executable, script, base_dir, "baseline"] + extra,
@@ -409,6 +409,12 @@ def test_sigkill_resume_bit_exact(tmp_path, variant):
     assert child.returncode == -signal.SIGKILL
     killed_at = latest_step(crash_dir)
     assert killed_at is not None and killed_at < 29
+    if variant == "paged":
+        # the killed run must actually have been exercising the incremental
+        # population chain (full + dirty-row delta files)
+        pops = [f for f in os.listdir(crash_dir) if f.startswith("pop_")
+                and f.endswith(".npz")]
+        assert len(pops) >= 2, sorted(os.listdir(crash_dir))
 
     p = subprocess.run([sys.executable, script, crash_dir, "resume"] + extra,
                        capture_output=True, text=True, env=env, timeout=420)

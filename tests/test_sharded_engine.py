@@ -244,6 +244,61 @@ def test_p4_group_layouts(equivalence):
 
 
 @pytest.mark.slow
+def test_paged_engine_bit_exact(equivalence):
+    """ISSUE 8 acceptance (paged ≡ resident tier): the host-resident
+    population with paged cohorts reproduces the resident engine bit-exactly
+    — final state AND full History (accuracy + every metric) — for
+    p4 / fedavg / dp_dsgt across full / sampling / async schedules,
+    including uneven cohort sizes (M=6 fixed-k, Bernoulli draws) and a
+    non-ring gossip graph whose in-neighbor closure the cohort planner must
+    page in."""
+    for name in ("paged_fedavg_full", "paged_fedavg_sampling_uneven",
+                 "paged_fedavg_bernoulli", "paged_fedavg_async0",
+                 "paged_dsgt_full", "paged_dsgt_sampling",
+                 "paged_dsgt_sampling_uneven", "paged_dsgt_async2",
+                 "paged_dsgt_expander_sampling", "paged_p4_full",
+                 "paged_p4_async1"):
+        rec = equivalence[name]
+        _assert_bit_exact(rec)
+        assert rec["metrics_bit_equal"], (name, rec)
+
+
+@pytest.mark.slow
+def test_paged_engine_p4_sampling(equivalence):
+    """P4 under sampling: state, accuracy, and every non-train metric stay
+    bit-exact; the train-loss means are the one documented paged difference
+    (cohort mean vs the resident's full-M mean over never-aggregated local
+    passes) and only need to stay in-range."""
+    rec = equivalence["paged_p4_sampling"]
+    _assert_bit_exact(rec)
+    assert rec["metrics_bit_equal"], rec
+    assert rec["excluded_maxdiff"] < 2.0, rec
+
+
+@pytest.mark.slow
+def test_paged_engine_fault_regime(equivalence):
+    """Paged ≡ resident under a correlated node-churn process: the planned
+    cohort is a superset of realized participants (faults only remove
+    clients), the fault carry is full-M, and absent clients stay
+    bit-frozen."""
+    rec = equivalence["paged_fedavg_sampling_faulty"]
+    _assert_bit_exact(rec)
+    assert rec["metrics_bit_equal"], rec
+
+
+@pytest.mark.slow
+def test_paged_engine_cohort_mesh(equivalence):
+    """Cohort axis sharded over the 8-device clients mesh (GSPMD partition
+    of the paged chunk): numerically tight vs the resident engine (bit-level
+    agreement is not contractual — partitioned reductions may
+    reassociate)."""
+    rec = equivalence["paged_mesh_fedavg_sampling"]
+    assert rec["rounds_equal"], rec
+    assert rec["accuracy_maxdiff"] < 1e-5, rec
+    assert rec["state_maxdiff"] < 1e-5, rec
+
+
+@pytest.mark.slow
 def test_p4_end_to_end_bit_exact(equivalence):
     """Whole trainer pipeline under a client mesh: bootstrap, host-side
     greedy grouping (identical groups — the bootstrap states are bit-exact),
