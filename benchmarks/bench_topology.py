@@ -133,7 +133,53 @@ def run(quick: bool = True, sharded: bool = False):
         print(f"[topology] {name}: {rps:.1f} r/s "
               f"gap={rec['spectral_gap']} "
               f"{rec['bytes_per_round']:.0f} B/round{extra}", flush=True)
+
+    rows += _learned_vs_static(data, feat, classes, batch)
     return rows
+
+
+def _learned_vs_static(data, feat: int, classes: int, batch: int):
+    """ISSUE 9 column: learned push-sum graph vs the static kregular4
+    family at EQUAL TOTAL byte budget (estimation traffic included) —
+    accuracy on both sides, plus the learned run's spectral-gap trajectory."""
+    from repro.topology.learned import run_learned_dsgt
+
+    M = data.num_clients
+    rounds, interval = 32, 8
+    net = P2PNetwork(M)
+    t0 = time.perf_counter()
+    _, lrec = run_learned_dsgt(data, rounds=rounds, interval=interval, k=4,
+                               lr=0.3, sigma=0.3, sigma_dist=2.0, batch=batch,
+                               seed=0, network=net, num_classes=classes)
+    lsecs = time.perf_counter() - t0
+    budget = net.total_bytes()
+
+    static = topo_lib.k_regular(M, 4)
+    load = _bytes_per_round(static, data, feat, classes)
+    rounds_s = max(4, round(budget / max(load["bytes_per_round"], 1.0)))
+    snet = P2PNetwork(M)
+    strat = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=0.3,
+                           sigma=0.3, topology=static)
+    _, hist = Engine(strat, eval_every=max(rounds_s - 1, 1), network=snet).fit(
+        data, rounds=rounds_s, key=jax.random.PRNGKey(0), batch_size=batch)
+
+    rec = {"name": "learned_vs_kregular4",
+           "learned_accuracy": round(float(lrec["accuracy"]), 4),
+           "static_accuracy": round(float(hist[-1][1]), 4),
+           "learned_rounds": rounds, "static_rounds_at_budget": rounds_s,
+           "bytes_budget": int(budget),
+           "learned_bytes_per_round": round(budget / rounds, 1),
+           "static_bytes_per_round": load["bytes_per_round"],
+           "gap_trajectory": lrec["gap_trajectory"],
+           "estimates": lrec["estimates"],
+           "fallbacks": lrec["fallbacks"],
+           "M": M, "batch": batch}
+    LAST_RECORDS.append(rec)
+    print(f"[topology] learned vs kregular4 @ equal bytes: "
+          f"{rec['learned_accuracy']} vs {rec['static_accuracy']} "
+          f"({rounds} vs {rounds_s} rounds), "
+          f"gaps={rec['gap_trajectory']}", flush=True)
+    return [("topology_learned_secs", lsecs * 1e6, round(lsecs, 1))]
 
 
 if __name__ == "__main__":

@@ -78,6 +78,25 @@ class DPDSGTStrategy(Strategy):
         M = ys.shape[0]
         return self._grads_keyed(params, xs, ys, jax.random.split(key, M))
 
+    @property
+    def _push_sum(self) -> bool:
+        return bool(self._mix_plan is not None and self._mix_plan.push_sum)
+
+    def align_push_sum_state(self, state):
+        """Reconcile a carried state across a topology swap (the learned-
+        graph drivers re-estimate between ``Engine.fit`` segments): entering
+        a push-sum plan grows the (M,) weight-scalar leaf at 1 (the carried
+        x is already unbiased), leaving one folds the bias back into x
+        (x ← x/w) and drops the leaf."""
+        from repro.topology.mixing import push_sum_debias
+        if self._push_sum and "w" not in state:
+            M = jax.tree_util.tree_leaves(state["x"])[0].shape[0]
+            state = dict(state, w=jnp.ones((M,), jnp.float32))
+        elif not self._push_sum and "w" in state:
+            state = dict(state)
+            state["x"] = push_sum_debias(state["x"], state.pop("w"))
+        return state
+
     # ---------------------------------------------------------------- hooks
     def init(self, key, data: FederatedData, batch_size):
         self._ensure_plan(data.num_clients)
@@ -88,20 +107,33 @@ class DPDSGTStrategy(Strategy):
         y_track = self._grads(x_params, xs0, ys0, k3)
         # distinct buffers: the engine donates the carry, and XLA rejects the
         # same buffer appearing twice in a donated argument
-        return {"x": x_params, "y": y_track,
-                "g": jax.tree_util.tree_map(jnp.copy, y_track)}
+        state = {"x": x_params, "y": y_track,
+                 "g": jax.tree_util.tree_map(jnp.copy, y_track)}
+        return self.align_push_sum_state(state)
 
     def local_update(self, state, xs, ys, r, key):
         # one communication round = one realized graph: both mixes share the
-        # round's fault realization (drawn in-jit off key's fault stream)
-        x_new = self.mix(state["x"], r, key)
+        # round's fault realization (drawn in-jit off key's fault stream).
+        # Under a push-sum plan (directed/learned W) the weight scalar rides
+        # the x mix as a joint leaf (gradient-push): gradients are taken at
+        # the de-biased z = x/w, and the tracker mixes with the same matrix.
+        if self._push_sum:
+            from repro.topology.mixing import push_sum_debias
+            mixed = self.mix({"x": state["x"], "w": state["w"]}, r, key)
+            x_new, w_new = mixed["x"], mixed["w"]
+        else:
+            x_new = self.mix(state["x"], r, key)
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
-        g_new = self._grads(x_new, xs, ys, key)
+        z = push_sum_debias(x_new, w_new) if self._push_sum else x_new
+        g_new = self._grads(z, xs, ys, key)
         y_new = self.mix(state["y"], r, key)
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
-        return {"x": x_new, "y": y_new, "g": g_new}, {}
+        out = {"x": x_new, "y": y_new, "g": g_new}
+        if self._push_sum:
+            out["w"] = w_new
+        return out, {}
 
     def sharded_local_update(self, state, xs, ys, r, key, ctx):
         """The gossip crosses client-shard boundaries, so it runs as a
@@ -117,16 +149,28 @@ class DPDSGTStrategy(Strategy):
         exactly what was prefetched."""
         from repro.engine.strategy import current_halos
         halos = current_halos()
-        x_new = self.mix_sharded(state["x"], r, key, ctx,
-                                 halo=None if halos is None else halos["x"])
+        if self._push_sum:
+            from repro.topology.mixing import push_sum_debias
+            mixed = self.mix_sharded(
+                {"x": state["x"], "w": state["w"]}, r, key, ctx,
+                halo=None if halos is None else halos["xw"])
+            x_new, w_new = mixed["x"], mixed["w"]
+        else:
+            x_new = self.mix_sharded(
+                state["x"], r, key, ctx,
+                halo=None if halos is None else halos["x"])
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
-        g_new = self._grads_keyed(x_new, xs, ys, ctx.shard_keys(key))
+        z = push_sum_debias(x_new, w_new) if self._push_sum else x_new
+        g_new = self._grads_keyed(z, xs, ys, ctx.shard_keys(key))
         y_new = self.mix_sharded(state["y"], r, key, ctx,
                                  halo=None if halos is None else halos["y"])
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
-        return {"x": x_new, "y": y_new, "g": g_new}, {}
+        out = {"x": x_new, "y": y_new, "g": g_new}
+        if self._push_sum:
+            out["w"] = w_new
+        return out, {}
 
     def paged_local_update(self, state, xs, ys, r, key, pctx):
         """Cohort-paged gossip round: the same call sequence as
@@ -134,30 +178,48 @@ class DPDSGTStrategy(Strategy):
         cohort slot map (the planner paged in every participant's
         in-neighbors) and gradients keyed by the global key split's cohort
         slice — participant rows are bit-identical to the resident step."""
-        x_new = self.mix_paged(state["x"], r, key, pctx)
+        if self._push_sum:
+            from repro.topology.mixing import push_sum_debias
+            mixed = self.mix_paged({"x": state["x"], "w": state["w"]}, r,
+                                   key, pctx)
+            x_new, w_new = mixed["x"], mixed["w"]
+        else:
+            x_new = self.mix_paged(state["x"], r, key, pctx)
         x_new = jax.tree_util.tree_map(lambda x, y: x - self.lr * y,
                                        x_new, state["y"])
-        g_new = self._grads_keyed(x_new, xs, ys, pctx.cohort_keys(key))
+        z = push_sum_debias(x_new, w_new) if self._push_sum else x_new
+        g_new = self._grads_keyed(z, xs, ys, pctx.cohort_keys(key))
         y_new = self.mix_paged(state["y"], r, key, pctx)
         y_new = jax.tree_util.tree_map(lambda y, a, b: y + a - b,
                                        y_new, g_new, state["g"])
-        return {"x": x_new, "y": y_new, "g": g_new}, {}
+        out = {"x": x_new, "y": y_new, "g": g_new}
+        if self._push_sum:
+            out["w"] = w_new
+        return out, {}
 
     def sharded_prefetch(self, state, ctx):
         """Issue the next round's boundary-row ppermutes from the end-of-
         round state (x and y are mixed at round start, so the rows a shard
         will need are known as soon as the round's update lands). Only the
         halo path prefetches — local/gather/identity paths have nothing to
-        overlap."""
+        overlap. Under push-sum the x halo carries the weight scalar too
+        (``sharded_local_update`` mixes them jointly)."""
         from repro.topology.mixing import select_mix_path, halo_start
         if self._mix_plan is None:
             return None
         if select_mix_path(self._mix_plan, ctx) != "halo":
             return None
+        if self._push_sum:
+            return {"xw": halo_start({"x": state["x"], "w": state["w"]},
+                                     self._mix_plan, ctx),
+                    "y": halo_start(state["y"], self._mix_plan, ctx)}
         return {"x": halo_start(state["x"], self._mix_plan, ctx),
                 "y": halo_start(state["y"], self._mix_plan, ctx)}
 
     def eval_params(self, state):
+        if "w" in state:
+            from repro.topology.mixing import push_sum_debias
+            return push_sum_debias(state["x"], state["w"])
         return state["x"]
 
     # ------------------------------------------------------ byte accounting

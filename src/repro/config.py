@@ -183,6 +183,16 @@ class TopologyConfig:
     period: int = 8         # gossip family: matchings per cycle
     bridge: bool = True     # group family: ring bridge between groups
     seed: int = 0           # random-family construction seed
+    # learned graphs (repro.topology.learned.GraphLearner): re-estimate the
+    # collaboration graph from private pairwise model similarity every
+    # learn_every rounds (0 = static graph), keeping learn_k out-neighbors
+    # per client; each release adds Gaussian noise at learn_sigma × clip to
+    # the measured distances and is charged to the PrivacyLedger
+    learn_every: int = 0    # rounds between re-estimations (0 = off)
+    learn_k: int = 0        # out-degree kept per client (0 => use k)
+    learn_window: int = 1   # estimates folded as a TimeVaryingTopology
+    learn_sigma: float = 1.0   # DP noise multiplier on released distances
+    learn_temperature: float = 1.0  # similarity→trust softmax temperature
 
 
 @dataclass(frozen=True)

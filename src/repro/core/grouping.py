@@ -40,9 +40,17 @@ def pairwise_l1(weights: jnp.ndarray,
 
 
 def greedy_group_formation(dist: np.ndarray, group_size: int,
-                           sample_peers: int = 35, seed: int = 0) -> List[List[int]]:
+                           sample_peers: int = 35, seed: int = 0,
+                           neighborhoods: Optional[np.ndarray] = None,
+                           ) -> List[List[int]]:
     """The paper's three-step greedy procedure. ``dist`` is the full M×M
-    matrix; sampling masks it to H peers per client (decentralized view)."""
+    matrix; sampling masks it to H peers per client (decentralized view).
+
+    ``neighborhoods`` (optional (M, M) boolean adjacency) restricts each
+    client's peer sampling to its communication-graph neighbors — clients can
+    only measure dissimilarity against peers they can actually reach, so group
+    formation respects a configured topology instead of assuming a clique.
+    """
     rng = np.random.default_rng(seed)
     M = dist.shape[0]
     H = min(sample_peers, M - 1)
@@ -50,8 +58,15 @@ def greedy_group_formation(dist: np.ndarray, group_size: int,
     # -- sampled visibility mask (each client only knows H random peers) ----
     known = np.zeros((M, M), bool)
     for i in range(M):
-        peers = rng.choice([j for j in range(M) if j != i], H, replace=False)
-        known[i, peers] = True
+        if neighborhoods is not None:
+            cands = [j for j in range(M)
+                     if j != i and bool(neighborhoods[i, j])]
+        else:
+            cands = [j for j in range(M) if j != i]
+        h = min(H, len(cands))
+        if h > 0:
+            peers = rng.choice(cands, h, replace=False)
+            known[i, peers] = True
     known |= known.T                      # measurements are symmetric
     masked = np.where(known, dist, np.inf)
 
@@ -77,7 +92,13 @@ def greedy_group_formation(dist: np.ndarray, group_size: int,
         groups.append([i, j])
         ungrouped -= {i, j}
     for i in sorted(ungrouped):          # odd leftover joins a random pair
-        groups[rng.integers(len(groups))].append(i)
+        if groups:
+            groups[rng.integers(len(groups))].append(i)
+        else:
+            # no pair ever formed (M == 1, or every peer unreachable under a
+            # restricted neighborhood): a degenerate singleton group is the
+            # only valid answer — rng.integers(0) would raise
+            groups.append([i])
 
     # -- step 3: merge groups until size T ----------------------------------
     def gdist(a: Sequence[int], b: Sequence[int]) -> float:

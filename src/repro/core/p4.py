@@ -182,15 +182,26 @@ class P4Trainer:
                 "proxy": group_mean(states["proxy"], ids, num_groups)}
 
     # ------------------------------------------------------------------
-    def form_groups(self, states, seed: int = 0) -> List[List[int]]:
+    def form_groups(self, states, seed: int = 0,
+                    topology=None) -> List[List[int]]:
+        """Phase-1 grouping. ``topology`` (optional) restricts each client's
+        peer sampling to its communication-graph neighborhood — clients only
+        measure similarity against peers they can reach (union adjacency for
+        time-varying graphs)."""
         p4c = self.cfg.p4
         M = jax.tree_util.tree_leaves(states["proxy"])[0].shape[0]
         if p4c.similarity == "random":
             return random_groups(M, p4c.group_size, seed)
         weights = flatten_clients(states["proxy"])
         dist = np.asarray(pairwise_l1(weights, kernels=self.cfg.kernels))
+        nbhd = None
+        if topology is not None:
+            nbhd = (topology.union_adjacency()
+                    if hasattr(topology, "union_adjacency")
+                    else topology.adjacency)
         return greedy_group_formation(dist, p4c.group_size,
-                                      p4c.sample_peers, seed)
+                                      p4c.sample_peers, seed,
+                                      neighborhoods=nbhd)
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
@@ -274,13 +285,25 @@ class P4Trainer:
                                   batch_size=None, evaluate=False)
         if ledger is not None:
             ledger.advance(nb, q=1.0)   # full batch, full participation
-        if groups is None:
-            groups = self.form_groups(states, seed)
-        strategy.set_groups(groups, M)
+        # topology-aware formation: when the run has an explicit graph that
+        # exists BEFORE grouping (any family but "group", which is derived
+        # from the groups themselves), Phase-1 peer sampling is restricted
+        # to graph neighborhoods — clients can only measure peers they reach
         topo_cfg = getattr(self.cfg, "topology", None)
-        if topo_cfg is not None and topo_cfg.family != "none":
+        pre_topo = None
+        if topo_cfg is not None and topo_cfg.family not in ("none", "group"):
             from repro.topology import make_topology
-            strategy.set_topology(make_topology(topo_cfg, M, groups=groups))
+            pre_topo = make_topology(topo_cfg, M)
+        if groups is None:
+            groups = self.form_groups(states, seed, topology=pre_topo)
+        strategy.set_groups(groups, M)
+        if topo_cfg is not None and topo_cfg.family != "none":
+            if pre_topo is not None:
+                strategy.set_topology(pre_topo)
+            else:
+                from repro.topology import make_topology
+                strategy.set_topology(make_topology(topo_cfg, M,
+                                                    groups=groups))
 
         # cfg.faults drives the co-train phase only: the bootstrap is the
         # grouping signal, and a faulted bootstrap would conflate grouping

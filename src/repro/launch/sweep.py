@@ -174,6 +174,98 @@ def topology_sweep(args) -> None:
                       f"acc={rec['accuracy']} "
                       f"bytes/round={rec['bytes_per_round']}", flush=True)
 
+        if getattr(args, "learned", False):
+            _learned_point(args, data, mesh, f)
+
+
+def _learned_point(args, data, mesh, f) -> None:
+    """The ``--learned`` point of the topology sweep: DP-DSGT with a
+    periodically re-learned push-sum graph, compared against every static
+    family at EQUAL TOTAL byte budget — each static family runs for however
+    many rounds its per-round gossip traffic affords out of the learned
+    run's measured spend (estimation traffic included), so dense graphs pay
+    for their extra links in rounds. Records the accuracy-vs-spectral-gap
+    trajectory of the learned sequence."""
+    import jax
+    import numpy as np
+
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    from repro.config import TopologyConfig
+    from repro.core.p2p import P2PNetwork
+    from repro.engine import Engine, ShardedEngine
+    from repro.topology import make_topology
+    from repro.topology.learned import run_learned_dsgt
+
+    M = data.num_clients
+    feat = int(data.train_x.shape[-1])
+    classes = int(np.asarray(data.train_y).max()) + 1
+    rounds, batch = args.rounds, 24
+
+    def dsgt_accuracy(topo, n_rounds, net=None):
+        strat = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=0.3,
+                               sigma=args.sigma, topology=topo)
+        eng = (ShardedEngine(strat, eval_every=max(n_rounds - 1, 1),
+                             network=net, mesh=mesh) if mesh is not None
+               else Engine(strat, eval_every=max(n_rounds - 1, 1),
+                           network=net))
+        _, hist = eng.fit(data, rounds=n_rounds,
+                          key=jax.random.PRNGKey(args.seed),
+                          batch_size=batch)
+        return float(hist[-1][1])
+
+    interval = args.learn_every or max(8, rounds // 4)
+    net = P2PNetwork(M)
+    t0 = time.time()
+    _, lrec = run_learned_dsgt(
+        data, rounds=rounds, interval=interval, k=args.degree, lr=0.3,
+        sigma=args.sigma, sigma_dist=args.learn_sigma,
+        window=args.learn_window, batch=batch, seed=args.seed, network=net,
+        mesh=mesh, num_classes=classes)
+    budget = net.total_bytes()
+    lacc = float(lrec["accuracy"])
+
+    comparisons = {}
+    for fam in args.families:
+        topo = make_topology(TopologyConfig(family=fam, k=args.degree,
+                                            seed=args.seed), M)
+        probe = P2PNetwork(M)
+        dsgt_accuracy(topo, 4, net=probe)
+        bpr = probe.total_bytes() / 4.0
+        rounds_f = int(np.clip(round(budget / max(bpr, 1.0)), 4, 4 * rounds))
+        comparisons[fam] = {
+            "rounds_at_budget": rounds_f,
+            "bytes_per_round": round(bpr, 1),
+            "accuracy": round(dsgt_accuracy(topo, rounds_f), 4),
+            "spectral_gap": topo.describe()["spectral_gap"],
+        }
+    matches_or_beats = {fam: bool(lacc + 5e-3 >= c["accuracy"])
+                        for fam, c in comparisons.items()}
+    rec = {"mode": "topology_learned",
+           "topology": lrec["final_topology"],
+           "accuracy": round(lacc, 4),
+           "rounds": rounds, "interval": interval,
+           "learn_sigma": float(args.learn_sigma),
+           "degree": int(args.degree),
+           "estimates": lrec["estimates"],
+           "fallbacks": lrec["fallbacks"],
+           "gap_trajectory": lrec["gap_trajectory"],
+           "history": [[int(r), round(float(a), 4)]
+                       for r, a in lrec["history"]],
+           "bytes_total": int(budget),
+           "bytes_per_round": round(budget / rounds, 1),
+           "equal_budget_static": comparisons,
+           "matches_or_beats": matches_or_beats,
+           "beats_all_static": bool(all(matches_or_beats.values())),
+           "seconds": round(time.time() - t0, 1),
+           "sharded": bool(mesh is not None)}
+    f.write(json.dumps(rec) + "\n")
+    f.flush()
+    print(f"learned: acc={rec['accuracy']} "
+          f"gaps={rec['gap_trajectory']} "
+          f"beats_all_static={rec['beats_all_static']} "
+          f"{ {k: c['accuracy'] for k, c in comparisons.items()} }",
+          flush=True)
+
 
 def faults_sweep(args) -> None:
     """P4 under the correlated fault chains: (burst length × link drop rate ×
@@ -296,6 +388,19 @@ def main():
                     help="--topology: degree for kregular/smallworld")
     ap.add_argument("--sigma", type=float, default=0.3,
                     help="--topology: DP noise multiplier")
+    ap.add_argument("--learned", action="store_true",
+                    help="--topology: add the learned-graph (push-sum) "
+                         "point with an equal-byte-budget comparison "
+                         "against every static family")
+    ap.add_argument("--learn-every", type=int, default=0,
+                    help="--learned: rounds between graph re-estimations "
+                         "(0 = rounds // 4)")
+    ap.add_argument("--learn-sigma", type=float, default=2.0,
+                    help="--learned: DP noise multiplier on the released "
+                         "pairwise distances")
+    ap.add_argument("--learn-window", type=int, default=1,
+                    help="--learned: estimates folded as a "
+                         "TimeVaryingTopology window")
     ap.add_argument("--faults", action="store_true",
                     help="run the P4 burst-length x drop-rate x "
                          "partition-frequency fault sweep")

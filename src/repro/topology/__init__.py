@@ -8,7 +8,10 @@ gossip sequences), ``mixing`` constructs doubly-stochastic mixing matrices
 in-jit sparse mixing step every P2P strategy shares, ``faults`` draws
 per-round link-drop / node-churn realizations inside the scanned round
 body, and ``accounting`` extends ``core.p2p.P2PNetwork`` with per-link
-byte/hop ledgers and shortest-path relay routing.
+byte/hop ledgers and shortest-path relay routing. ``learned`` learns the
+graph jointly with the models (private periodic re-estimation from
+pairwise model similarity), whose directed column-stochastic weights mix
+via the push-sum path in ``mixing``.
 """
 from repro.topology.accounting import (log_gossip_round, per_link_summary,
                                        route, send_routed, shortest_hops)
@@ -19,8 +22,13 @@ from repro.topology.graphs import (TimeVaryingTopology, Topology,
                                    gossip_matchings, group_clustered,
                                    k_regular, make_topology, ring,
                                    small_world, torus)
+from repro.topology.learned import (GraphLearner, make_learner,
+                                    run_learned_dsgt, sparsify_similarity)
 from repro.topology.mixing import (MixPlan, edges_shard_resident,
-                                   is_connected, is_doubly_stochastic,
-                                   make_plan, metropolis_weights, mix_stacked,
-                                   mix_stacked_sharded, spectral_gap,
-                                   uniform_weights)
+                                   is_column_stochastic, is_connected,
+                                   is_doubly_stochastic, make_plan,
+                                   metropolis_weights, mix_stacked,
+                                   mix_stacked_sharded, push_sum_debias,
+                                   push_sum_mix, push_sum_mix_paged,
+                                   push_sum_mix_sharded, push_sum_weights,
+                                   spectral_gap, uniform_weights)

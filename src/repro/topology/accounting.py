@@ -77,7 +77,10 @@ def log_gossip_round(net, topology, stacked_params, rnd: int,
     carries i's own parameter slice. ``mask`` is the round's participation
     cohort (absent endpoints exchange nothing — matching the schedule's
     freeze semantics), ``keep`` the realized fault matrix from
-    ``host_fault_masks`` (dropped links carry nothing). Returns total bytes.
+    ``host_fault_masks`` (dropped links carry nothing). Directed (learned)
+    graphs only pay for edges that carry weight: adjacency is the symmetric
+    support union, so an i → j message exists iff receiver j actually reads
+    i (W[j, i] > 0) — a no-op for symmetric families. Returns total bytes.
     """
     import jax
     topo = topology
@@ -88,6 +91,8 @@ def log_gossip_round(net, topology, stacked_params, rnd: int,
         if mask is not None and (mask[i] <= 0 or mask[j] <= 0):
             continue
         if keep is not None and keep[i, j] <= 0:
+            continue
+        if topo.weights[j, i] <= 0:          # directed: j never reads i
             continue
         own = jax.tree_util.tree_map(lambda t: t[i], stacked_params)
         total += net.send(i, j, own, kind, rnd=rnd)

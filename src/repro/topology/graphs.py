@@ -103,8 +103,12 @@ class Topology:
 
     # --------------------------------------------------------- value hashing
     def fingerprint(self) -> Tuple:
-        return ("topology", self.name, self.M, self.weights.tobytes(),
-                self.drop_prob, self.churn_prob)
+        # adjacency bytes must be part of the key: two graphs can share W
+        # (e.g. any builder at self_weight=1.0 yields W = I) while differing
+        # in support — and therefore in byte accounting, routing, and fault
+        # masks. Hashing W alone let them collide in the compiled-chunk cache.
+        return ("topology", self.name, self.M, self.adjacency.tobytes(),
+                self.weights.tobytes(), self.drop_prob, self.churn_prob)
 
     def __hash__(self):
         return hash(self.fingerprint())

@@ -1,0 +1,284 @@
+"""Learned, time-varying collaboration graphs (Dada / MAPL direction).
+
+Instead of fixing the communication graph up front, the federation
+periodically re-estimates it from how the models themselves have diverged
+(Zantedeschi et al. 2020 alternate model steps with sparsity-controlled
+graph updates; MAPL 2024 learns personalized weighted graphs that beat any
+static topology):
+
+  1. every re-estimation releases the clients' flattened weights once more:
+     pairwise ℓ1 discrepancies go through the same triangular dispatch
+     kernel Phase-1 grouping uses (``repro.kernels.dispatch.pairwise_l1``),
+     plus calibrated symmetric Gaussian noise on the released distances;
+  2. each client keeps its k most-similar peers (mutual kNN support — if i
+     measures j as similar, j may also use i) and splits its trust mass
+     over them with a temperature-scaled softmax of −distance; the
+     resulting row-stochastic trust matrix transposes into the
+     column-stochastic W push-sum mixing consumes;
+  3. if the learned support is disconnected, ring edges are unioned into
+     every candidate set and the softmax re-runs (connectivity-or-fallback
+     — push-sum's ratio estimate needs strong connectivity);
+  4. each estimate is charged to the ``PrivacyLedger`` as one adaptive
+     release at the estimate's own noise multiplier (``sigma_dist <= 0``
+     honestly reports ε = ∞), and its measurement traffic is logged on the
+     ``P2PNetwork`` so equal-byte-budget comparisons include it.
+
+The learner folds its history in as a standard ``Topology`` /
+``TimeVaryingTopology`` (symmetric support + directed weights), so the
+compiled-chunk cache, fault masks, halo schedules, and byte accounting all
+keep working unchanged — ``Strategy.set_topology`` with the new estimate
+bumps the cache token and the adjacency+weights fingerprint keys the chunk.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.topology.graphs import TimeVaryingTopology, Topology
+from repro.topology.mixing import is_connected, push_sum_weights
+
+
+def sparsify_similarity(dist: np.ndarray, k: int, *,
+                        temperature: float = 1.0, self_weight: float = 0.5,
+                        ensure_connected: bool = True,
+                        ) -> Tuple[np.ndarray, bool]:
+    """Row-stochastic sparse trust matrix from an (M, M) distance matrix.
+
+    Each node keeps its k nearest peers; candidate sets are symmetrized
+    (mutual kNN), so the directed trust graph has symmetric support — which
+    makes strong connectivity equivalent to plain connectivity of the
+    support, the property push-sum needs. Trust shares are
+    softmax(−d / (τ · median(d))) over each row's candidates scaled to
+    ``1 − self_weight``, with ``self_weight`` kept on the diagonal.
+
+    Returns ``(trust, fell_back)``; ``fell_back`` is True when the learned
+    support was disconnected and ring edges were unioned in.
+    """
+    d = np.asarray(dist, np.float64)
+    M = d.shape[0]
+    if M <= 1:
+        return np.eye(max(M, 1)), False
+    k = max(1, min(int(k), M - 1))
+    off = d + np.where(np.eye(M, dtype=bool), np.inf, 0.0)
+    order = np.argsort(off, axis=1, kind="stable")
+    cand = np.zeros((M, M), bool)
+    cand[np.arange(M)[:, None], order[:, :k]] = True
+    cand |= cand.T
+    np.fill_diagonal(cand, False)
+    fell_back = False
+    if ensure_connected and not is_connected(cand):
+        fell_back = True
+        idx = np.arange(M)
+        cand[idx, (idx + 1) % M] = True
+        cand[idx, (idx - 1) % M] = True
+        cand |= cand.T
+        np.fill_diagonal(cand, False)
+    scale = float(np.median(off[cand])) if cand.any() else 1.0
+    scale = max(scale, 1e-12) * max(float(temperature), 1e-6)
+    z = np.where(cand, -off / scale, -np.inf)
+    z = z - z.max(axis=1, keepdims=True)
+    e = np.exp(z)
+    p = e / e.sum(axis=1, keepdims=True)
+    # exploration floor: a tiny uniform share over each row's candidates.
+    # Without it the softmax underflows to exactly 0 for very-far fallback
+    # edges, which would silently disconnect the support again — the trust
+    # graph must have positive weight on EVERY candidate edge.
+    floor = 1e-3
+    u = cand / np.maximum(cand.sum(axis=1, keepdims=True), 1)
+    p = (1.0 - floor) * p + floor * u
+    s = float(np.clip(self_weight, 0.0, 1.0))
+    trust = (1.0 - s) * p
+    np.fill_diagonal(trust, s)
+    return trust, fell_back
+
+
+@dataclass(eq=False)
+class GraphLearner:
+    """Private periodic graph re-estimation.
+
+    ``estimate`` turns one (M, D) matrix of DP-protected client weights into
+    a fresh directed ``Topology`` (column-stochastic W over a symmetric
+    support); ``current`` folds the last ``window`` estimates into the
+    evolving graph handed to ``Strategy.set_topology``. The learner keeps
+    the full estimate ``history`` and the ``gap_trajectory`` of spectral
+    gaps the sweep plots.
+    """
+
+    M: int
+    k: int = 4
+    temperature: float = 1.0
+    self_weight: float = 0.5
+    sigma_dist: float = 1.0        # noise multiplier on released distances
+    clip: float = 1.0              # release sensitivity (the DP clip bound)
+    window: int = 1
+    seed: int = 0
+    kernels: Optional[object] = None
+    name: str = "learned"
+
+    def __post_init__(self):
+        self.history: List[Topology] = []
+        self.gap_trajectory: List[float] = []
+        self.fallbacks = 0
+        self._rng = np.random.default_rng(self.seed)
+
+    # ------------------------------------------------------------------
+    def estimate(self, weights, *, ledger=None, net=None, rnd: int = 0,
+                 ) -> Topology:
+        """One re-estimation from the (M, D) client weight matrix.
+
+        The pairwise distances are computed with the triangular dispatch
+        kernel, perturbed by symmetric Gaussian noise of scale
+        ``sigma_dist · clip`` (both endpoints of a measurement see the same
+        noisy value), and the release is charged to ``ledger`` as one more
+        adaptive query at that noise multiplier. ``net`` (optional
+        ``P2PNetwork``) logs the measurement traffic — every client ships
+        its flattened weights to its learned neighbors.
+        """
+        import jax.numpy as jnp
+
+        from repro.core.grouping import pairwise_l1
+
+        w = jnp.asarray(weights)
+        if w.ndim != 2 or w.shape[0] != self.M:
+            raise ValueError(f"expected (M={self.M}, D) weights, got "
+                             f"{tuple(w.shape)}")
+        dist = np.asarray(pairwise_l1(w, kernels=self.kernels), np.float64)
+        if self.sigma_dist > 0:
+            noise = self._rng.normal(size=dist.shape) \
+                * self.sigma_dist * self.clip
+            noise = np.triu(noise, 1)
+            dist = np.maximum(dist + noise + noise.T, 0.0)
+            np.fill_diagonal(dist, 0.0)
+        if ledger is not None:
+            # one extra release of the per-client weights: composed into the
+            # run's RDP budget at this release's own noise multiplier;
+            # sigma_dist <= 0 honestly drives ε to ∞
+            ledger.advance(1, q=1.0, sigma=self.sigma_dist)
+        trust, fell_back = sparsify_similarity(
+            dist, self.k, temperature=self.temperature,
+            self_weight=self.self_weight)
+        self.fallbacks += int(fell_back)
+        support = (trust > 0) | (trust > 0).T
+        np.fill_diagonal(support, False)
+        topo = Topology(f"{self.name}{self.M}_t{len(self.history)}",
+                        support, push_sum_weights(trust))
+        self.history.append(topo)
+        self.gap_trajectory.append(topo.spectral_gap())
+        if net is not None:
+            self._log_estimation(net, int(np.asarray(weights).shape[-1]), rnd)
+        return topo
+
+    def current(self, window: Optional[int] = None):
+        """The evolving graph for ``Strategy.set_topology``: the last
+        ``window`` estimates as a ``TimeVaryingTopology`` (a single static
+        ``Topology`` when one estimate suffices)."""
+        if not self.history:
+            raise ValueError("GraphLearner has no estimates yet; call "
+                             "estimate() first")
+        w = max(1, int(window if window is not None else self.window))
+        topos = self.history[-w:]
+        if len(topos) == 1:
+            return topos[0]
+        return TimeVaryingTopology(
+            f"{self.name}{self.M}_w{len(topos)}_t{len(self.history)}",
+            list(topos))
+
+    # ------------------------------------------------------------------
+    def _log_estimation(self, net, feat_dim: int, rnd: int) -> None:
+        """Byte-account the measurement itself: each client ships its (D,)
+        flattened DP weights to every learned neighbor, so equal-byte-budget
+        sweeps pay for the re-estimation traffic too."""
+        payload = np.zeros((feat_dim,), np.float32)
+        adj = self.history[-1].adjacency
+        for i in range(self.M):
+            for j in np.nonzero(adj[i])[0]:
+                net.send(int(i), int(j), payload, kind="graph_estimate",
+                         rnd=rnd)
+
+
+def make_learner(cfg, M: int, kernels=None, clip: float = 1.0,
+                 ) -> GraphLearner:
+    """GraphLearner from a ``TopologyConfig``'s learn_* knobs."""
+    return GraphLearner(M=M, k=int(cfg.learn_k) or int(cfg.k),
+                        temperature=float(cfg.learn_temperature),
+                        self_weight=float(cfg.self_weight),
+                        sigma_dist=float(cfg.learn_sigma), clip=clip,
+                        window=int(cfg.learn_window), seed=int(cfg.seed),
+                        kernels=kernels)
+
+
+def run_learned_dsgt(data, *, rounds: int, interval: int, k: int = 4,
+                     lr: float = 0.3, clip: float = 1.0, sigma: float = 0.0,
+                     sigma_dist: float = 1.0, window: int = 1,
+                     temperature: float = 1.0, self_weight: float = 0.5,
+                     batch: int = 16, seed: int = 0, network=None,
+                     ledger=None, mesh=None, eval_every: Optional[int] = None,
+                     kernels=None, num_classes: Optional[int] = None):
+    """DP-DSGT with a periodically re-learned push-sum graph.
+
+    Segment 0 runs on the default ring; every ``interval`` rounds the
+    learner re-estimates the graph from the current (already DP-noised)
+    client models, the strategy's topology is swapped (cache-correct: the
+    estimate's fingerprint keys the compiled chunk) and the state is
+    aligned across the symmetric↔push-sum boundary. Training continues via
+    ``Engine.fit(start_round=, state=)`` — the resume path — so per-round
+    keys, fault replay, and ledger advancement stay consistent with an
+    uninterrupted run.
+
+    Returns ``(state, record)``; the record carries the stitched accuracy
+    history, the spectral-gap trajectory, and the estimate count.
+    """
+    import jax
+
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    from repro.engine import Engine
+    from repro.engine.sharded import ShardedEngine
+
+    M = data.num_clients
+    feat = int(data.train_x.shape[-1])
+    classes = (int(num_classes) if num_classes is not None
+               else int(np.asarray(data.train_y).max()) + 1)
+    strategy = DPDSGTStrategy(feat_dim=feat, num_classes=classes, lr=lr,
+                              clip=clip, sigma=sigma)
+    learner = GraphLearner(M=M, k=k, temperature=temperature,
+                           self_weight=self_weight, sigma_dist=sigma_dist,
+                           clip=clip, window=window, seed=seed,
+                           kernels=kernels)
+    ev = int(eval_every if eval_every is not None else interval)
+    if mesh is not None:
+        engine = ShardedEngine(strategy, eval_every=ev, network=network,
+                               ledger=ledger, mesh=mesh)
+    else:
+        engine = Engine(strategy, eval_every=ev, network=network,
+                        ledger=ledger)
+    key = jax.random.PRNGKey(seed)
+
+    history_pairs: List[Tuple[int, float]] = []
+    state = None
+    r0 = 0
+    while r0 < rounds:
+        r1 = min(r0 + int(interval), rounds)
+        state, hist = engine.fit(data, rounds=r1, key=key, batch_size=batch,
+                                 start_round=r0, state=state)
+        history_pairs.extend(hist.as_tuples())
+        r0 = r1
+        if r0 >= rounds:
+            break
+        from repro.core.grouping import flatten_clients
+        flat = np.asarray(flatten_clients(state["x"]))
+        learner.estimate(flat, ledger=ledger, net=network, rnd=r0 - 1)
+        strategy.set_topology(learner.current(), kernels=kernels)
+        state = strategy.align_push_sum_state(state)
+
+    record = {
+        "accuracy": history_pairs[-1][1] if history_pairs else None,
+        "history": history_pairs,
+        "gap_trajectory": [round(g, 6) for g in learner.gap_trajectory],
+        "estimates": len(learner.history),
+        "fallbacks": learner.fallbacks,
+        "final_topology": (learner.history[-1].describe()
+                          if learner.history else None),
+    }
+    return state, record

@@ -93,6 +93,27 @@ def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:
             and np.allclose(w.sum(axis=1), 1.0, atol=1e-8))
 
 
+def is_column_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:
+    """Column sums 1 (every sender's outgoing shares, incl. its self-share,
+    sum to 1) — the mass-conservation property push-sum mixing needs."""
+    w = np.asarray(w, np.float64)
+    return (np.all(w >= -tol)
+            and np.allclose(w.sum(axis=0), 1.0, atol=1e-8))
+
+
+def push_sum_weights(trust: np.ndarray) -> np.ndarray:
+    """Column-stochastic mixing matrix from a row-stochastic trust matrix.
+
+    Row i of ``trust`` is how client i splits its outgoing mass across the
+    peers it trusts (plus itself). The mixing step is still the row gather
+    ``x_i ← Σ_j W_ij x_j``, so the matrix handed to ``make_plan`` must carry
+    sender j's share to receiver i at W[i, j] — i.e. ``trust.T``."""
+    t = np.asarray(trust, np.float64)
+    if not np.allclose(t.sum(axis=1), 1.0, atol=1e-8) or np.any(t < -1e-12):
+        raise ValueError("trust matrix must be row stochastic")
+    return t.T.copy()
+
+
 def is_connected(adjacency: np.ndarray) -> bool:
     """BFS from node 0 (single-node graphs count as connected)."""
     adj = np.asarray(adjacency, bool)
@@ -110,12 +131,17 @@ def is_connected(adjacency: np.ndarray) -> bool:
 
 
 def spectral_gap(w: np.ndarray) -> float:
-    """1 − |λ₂| of a symmetric mixing matrix: the per-round contraction of
-    the consensus error, the quantity accuracy-vs-topology sweeps plot."""
+    """1 − |λ₂| of a mixing matrix: the per-round contraction of the
+    consensus error, the quantity accuracy-vs-topology sweeps plot.
+    Symmetric W uses the Hermitian solver; directed (learned) W falls back
+    to the general eigenvalue problem on |λ|."""
     w = np.asarray(w, np.float64)
     if w.shape[0] <= 1:
         return 1.0
-    lam = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
+    if np.allclose(w, w.T, atol=1e-12):
+        lam = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
+    else:
+        lam = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
     return float(1.0 - lam[1])
 
 
@@ -144,14 +170,30 @@ class MixPlan:
     # optional KernelConfig: opts the halo mix step's row blocking into the
     # dispatch autotuner (None => always the untiled lowering)
     kernels: Optional[object] = None
+    # push-sum mode: W is column- but not row-stochastic (directed/learned
+    # graphs). The gather arithmetic is unchanged; consumers must carry a
+    # per-node weight scalar through the same mix and de-bias by it.
+    push_sum: bool = False
+    # (T, M, d) outgoing shares W[nbr_k, i] aligned with nbr_np's slots —
+    # what row i SENDS to each listed neighbor. Only set under push-sum:
+    # the fault fold must return a dropped link's mass to the sender's
+    # diagonal (not the receiver's) to keep the realized matrix
+    # column-stochastic.
+    out_w_np: Optional[np.ndarray] = None
 
     @property
     def faulty(self) -> bool:
         return self.drop_prob > 0.0 or self.churn_prob > 0.0
 
 
-def make_plan(topology, kernels=None) -> MixPlan:
-    """Compile a (possibly time-varying) topology into a MixPlan."""
+def make_plan(topology, kernels=None, push_sum: Optional[bool] = None) -> MixPlan:
+    """Compile a (possibly time-varying) topology into a MixPlan.
+
+    Row-stochastic W compiles to the standard averaging plan. A W that is
+    column- but not row-stochastic (directed/learned graphs) compiles to a
+    push-sum plan automatically; pass ``push_sum=True`` to force push-sum
+    on a doubly-stochastic W (it converges to the same fixed point — the
+    weight scalar stays ≈ 1)."""
     topos = getattr(topology, "topologies", None) or [topology]
     M = topos[0].M
     d = max((int(t.degrees.max()) if t.M and t.num_edges else 0)
@@ -168,26 +210,57 @@ def make_plan(topology, kernels=None) -> MixPlan:
             nbr_w[t, i, : len(js)] = w[i, js].astype(np.float32)
             self_w[t, i] = np.float32(w[i, i])
 
-    # uniform fast path: one scalar self weight + one scalar edge weight and
-    # a full (regular) slot occupancy everywhere — the precondition for the
-    # coefficient-after-sum expression the bit-exact ring contract needs
-    uniform = None
-    pos_w = nbr_w[nbr_w > 0]
-    if (d > 0 and pos_w.size == T * M * d
-            and np.all(pos_w == pos_w.flat[0])
-            and np.all(self_w == self_w.flat[0])):
-        uniform = (float(self_w.flat[0]), float(pos_w.flat[0]))
+    row_ok = all(np.allclose(t.weights.sum(axis=1), 1.0, atol=1e-6)
+                 for t in topos)
+    col_ok = all(np.allclose(t.weights.sum(axis=0), 1.0, atol=1e-6)
+                 for t in topos)
+    if push_sum is None:
+        push_sum = col_ok and not row_ok
+    if push_sum and not col_ok:
+        raise ValueError(
+            "push-sum mixing needs a column-stochastic W (every sender's "
+            "outgoing shares must sum to 1)")
+    if not push_sum and not row_ok:
+        raise ValueError(
+            "standard mixing needs a row-stochastic W; a directed "
+            "column-stochastic W (learned graphs) mixes via push-sum — "
+            "make_plan detects this automatically, so the weights here are "
+            "neither row- nor column-stochastic")
 
-    ring = bool(
-        uniform is not None and d == 2 and T == 1 and M > 2
-        and all(set(nbr[0, i]) == {(i - 1) % M, (i + 1) % M}
-                for i in range(M)))
+    out_w = None
+    uniform = None
+    ring = False
+    if push_sum:
+        # the sender-side share stack: out_w[t, i, k] is what row i ships to
+        # nbr[t, i, k] — W[nbr_k, i]. Slot padding (self-loop index, zero
+        # in-weight) gets a zero out-share too: padded slots carry no mass.
+        out_w = np.zeros_like(nbr_w)
+        for t, topo in enumerate(topos):
+            w = topo.weights
+            for i in range(M):
+                js = np.nonzero(topo.adjacency[i])[0]
+                out_w[t, i, : len(js)] = w[js, i].astype(np.float32)
+    else:
+        # uniform fast path: one scalar self weight + one scalar edge weight
+        # and a full (regular) slot occupancy everywhere — the precondition
+        # for the coefficient-after-sum expression the bit-exact ring
+        # contract needs
+        pos_w = nbr_w[nbr_w > 0]
+        if (d > 0 and pos_w.size == T * M * d
+                and np.all(pos_w == pos_w.flat[0])
+                and np.all(self_w == self_w.flat[0])):
+            uniform = (float(self_w.flat[0]), float(pos_w.flat[0]))
+
+        ring = bool(
+            uniform is not None and d == 2 and T == 1 and M > 2
+            and all(set(nbr[0, i]) == {(i - 1) % M, (i + 1) % M}
+                    for i in range(M)))
     return MixPlan(topology=topology, M=M, degree=d, period=T,
                    nbr_np=nbr, nbr_w_np=nbr_w, self_w_np=self_w,
                    uniform=uniform, ring=ring,
                    drop_prob=float(getattr(topology, "drop_prob", 0.0)),
                    churn_prob=float(getattr(topology, "churn_prob", 0.0)),
-                   kernels=kernels)
+                   kernels=kernels, push_sum=bool(push_sum), out_w_np=out_w)
 
 
 def _round_slice(arr: np.ndarray, r, period: int):
@@ -204,7 +277,12 @@ def _round_slice(arr: np.ndarray, r, period: int):
 def _fault_adjusted_rows(plan: MixPlan, nbr, r, key, keep=None):
     """(self_w, nbr_w) rows for round r with this round's fault realization
     folded in: dropped slots zeroed, their mass moved to the diagonal — the
-    realized matrix stays symmetric doubly stochastic. An explicit ``keep``
+    realized matrix stays symmetric doubly stochastic. Under push-sum the
+    diagonal refund instead uses the OUTGOING shares (``plan.out_w_np``):
+    with symmetric keep realizations a dropped link removes W[i,j]·x_j from
+    receiver i and returns i's own undeliverable share W[j,i]·x_i to i, so
+    every realized column still sums to one (mass conservation, the
+    invariant push-sum's ratio estimate rests on). An explicit ``keep``
     (a correlated process realization from ``repro.resilience``) supersedes
     the plan's i.i.d. draw."""
     import jax.numpy as jnp
@@ -217,7 +295,9 @@ def _fault_adjusted_rows(plan: MixPlan, nbr, r, key, keep=None):
         keep, _up = draw_fault_masks(key, plan.M, plan.drop_prob,
                                      plan.churn_prob)
     keep_slots = keep[jnp.arange(plan.M)[:, None], nbr]
-    s_row = s_row + jnp.sum(w_row * (1.0 - keep_slots), axis=1)
+    fold_w = (w_row if plan.out_w_np is None
+              else _round_slice(plan.out_w_np, r, plan.period))
+    s_row = s_row + jnp.sum(fold_w * (1.0 - keep_slots), axis=1)
     return s_row, w_row * keep_slots
 
 
@@ -332,6 +412,64 @@ def mix_stacked_paged(tree, plan: MixPlan, r, key, pctx, keep=None):
         return acc.astype(t.dtype)
 
     return jax.tree_util.tree_map(mix_g, tree)
+
+
+# ---------------------------------------------------------------------------
+# Push-sum mixing (directed / learned graphs, column-stochastic W)
+# ---------------------------------------------------------------------------
+#
+# A learned collaboration graph is generally directed and only
+# column-stochastic: sender j splits its unit mass across the peers it
+# trusts. Plain averaging with such a W biases every estimate toward
+# high-in-degree nodes. Push-sum (Kempe et al. 2003; gradient-push,
+# Nedić & Olshevsky 2016) fixes this with one extra scalar per node: mix a
+# weight w (initialized to 1) with the SAME matrix as the values and read
+# the de-biased estimate x/w — on a strongly-connected W the ratio
+# converges to the uniform average because both numerator and denominator
+# pick up the same Perron re-weighting. When W happens to be doubly
+# stochastic, w stays exactly 1 up to float rounding and push-sum reduces
+# to the symmetric path.
+
+
+def push_sum_mix(tree, weights, plan: MixPlan, r=0, key=None, keep=None):
+    """One push-sum gossip round: returns ``(tree', weights')`` with both the
+    stacked (M, ...) value tree and the (M,) weight scalars mixed by the
+    round's realized matrix. The weights ride as one more leaf through
+    ``mix_stacked`` so fault folding, time variation, and the round's keep
+    mask apply to values and weights identically (the invariant de-biasing
+    needs)."""
+    mixed = mix_stacked({"v": tree, "w": weights}, plan, r, key, keep=keep)
+    return mixed["v"], mixed["w"]
+
+
+def push_sum_mix_sharded(tree, weights, plan: MixPlan, r, key, ctx,
+                         keep=None, halo=None):
+    """Sharded twin of ``push_sum_mix`` — same joint-leaf trick through
+    ``mix_stacked_sharded``, so the halo/local/gather path selection and the
+    MIX_STATS probe see one mix call for values + weights together."""
+    mixed = mix_stacked_sharded({"v": tree, "w": weights}, plan, r, key, ctx,
+                                keep=keep, halo=halo)
+    return mixed["v"], mixed["w"]
+
+
+def push_sum_mix_paged(tree, weights, plan: MixPlan, r, key, pctx, keep=None):
+    """Paged twin of ``push_sum_mix`` for cohort-resident (C, ...) trees."""
+    mixed = mix_stacked_paged({"v": tree, "w": weights}, plan, r, key, pctx,
+                              keep=keep)
+    return mixed["v"], mixed["w"]
+
+
+def push_sum_debias(tree, weights):
+    """The push-sum estimate: every stacked leaf divided by its row's weight
+    scalar (x/w), cast back to the leaf dtype."""
+    import jax
+    import jax.numpy as jnp
+
+    def one(t):
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        return (t / jnp.asarray(weights).reshape(ex)).astype(t.dtype)
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 # ---------------------------------------------------------------------------

@@ -199,6 +199,28 @@ def main() -> None:
         feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
         topology=topo_lib.torus(4, 2)))
 
+    # ISSUE 9: learned directed graphs mix via push-sum — the weight scalar
+    # rides the x mix as a joint leaf, so the sharded lowering must stay
+    # equivalent through the same halo/gather path selection. One static
+    # estimate, one faulted (the sender-side diagonal fold), and one
+    # time-varying two-estimate window.
+    lrn_rng = np.random.default_rng(7)
+    learner = topo_lib.GraphLearner(M=M, k=3, sigma_dist=0.5, seed=7)
+    learned_a = learner.estimate(
+        lrn_rng.normal(size=(M, 24)).astype(np.float32))
+    learner.estimate(lrn_rng.normal(size=(M, 24)).astype(np.float32))
+    learned_tv = learner.current(window=2)
+    assert make_plan(learned_a).push_sum
+    compare("dsgt_learned_pushsum", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=learned_a))
+    compare("dsgt_learned_faulty", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=learned_a.with_faults(0.25, 0.1)))
+    compare("dsgt_learned_timevarying", lambda: DPDSGTStrategy(
+        feat_dim=feat, num_classes=classes, lr=0.3, clip=1.0, sigma=0.5,
+        topology=learned_tv))
+
     # shard-resident topology on a 2-slice mesh: the mix needs no collective
     mesh2_t = make_client_mesh(2)
     resident_topo = topo_lib.group_clustered([[0, 1, 2, 3], [4, 5, 6, 7]], M,

@@ -43,6 +43,70 @@ def test_greedy_grouping_with_small_sampling():
     assert all(len(g) <= 5 for g in groups)
 
 
+def _sym_dist(M: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    d = np.abs(rng.normal(size=(M, M)))
+    d = d + d.T
+    np.fill_diagonal(d, 0)
+    return d
+
+
+@pytest.mark.parametrize("M", [1, 2, 3, 5])
+@pytest.mark.parametrize("group_size", [1, 2, 4, 8])
+def test_greedy_grouping_degenerate_sizes(M, group_size):
+    """ISSUE 9 regression: the odd-leftover step crashed with
+    ``rng.integers(0)`` when no pair ever formed (M=1, or group_size larger
+    than the population). Every edge case must return a valid partition."""
+    groups = greedy_group_formation(_sym_dist(M, seed=M), group_size,
+                                    sample_peers=35, seed=0)
+    assert sorted(sum(groups, [])) == list(range(M))
+    # pairs always form first, and an odd leftover may join one — so the
+    # hard ceiling is max(group_size, 2) + 1, not group_size itself
+    assert all(len(g) <= max(group_size, 2) + 1 for g in groups)
+
+
+def test_greedy_grouping_single_client():
+    """M=1 is the direct crash reproducer: no pairs, one leftover."""
+    assert greedy_group_formation(np.zeros((1, 1)), group_size=4) == [[0]]
+
+
+def test_greedy_grouping_zero_sampling():
+    """sample_peers=0: nobody measures anyone, formation still partitions
+    (random pairing fallback)."""
+    groups = greedy_group_formation(_sym_dist(6, seed=2), group_size=2,
+                                    sample_peers=0, seed=3)
+    assert sorted(sum(groups, [])) == list(range(6))
+
+
+def test_greedy_grouping_neighborhood_restricted():
+    """Peer sampling restricted to graph neighborhoods: clients only measure
+    reachable peers, and two far-apart cliques never probe each other, so
+    groups respect the components."""
+    M = 8
+    d = _sym_dist(M, seed=4)
+    nbhd = np.zeros((M, M), bool)
+    nbhd[:4, :4] = True
+    nbhd[4:, 4:] = True
+    np.fill_diagonal(nbhd, False)
+    groups = greedy_group_formation(d, group_size=4, sample_peers=35, seed=0,
+                                    neighborhoods=nbhd)
+    assert sorted(sum(groups, [])) == list(range(M))
+    for g in groups:
+        sides = {i // 4 for i in g}
+        assert len(sides) == 1, f"group {g} crosses disconnected components"
+
+
+def test_greedy_grouping_isolated_nodes():
+    """A fully disconnected neighborhood leaves every client unmeasured; the
+    leftover fallback must not crash and still partitions."""
+    M = 5
+    nbhd = np.zeros((M, M), bool)
+    groups = greedy_group_formation(_sym_dist(M, seed=5), group_size=2,
+                                    sample_peers=10, seed=0,
+                                    neighborhoods=nbhd)
+    assert sorted(sum(groups, [])) == list(range(M))
+
+
 def test_random_groups_partition():
     groups = random_groups(20, 8, seed=0)
     assert sorted(sum(groups, [])) == list(range(20))

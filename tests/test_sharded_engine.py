@@ -154,6 +154,22 @@ def test_dsgt_faulty_topology_equivalence(equivalence):
 
 
 @pytest.mark.slow
+def test_dsgt_learned_pushsum_equivalence(equivalence):
+    """ISSUE 9 acceptance: learned directed graphs (column-stochastic W,
+    push-sum weight scalar riding the x mix as a joint leaf) stay sharded ≡
+    single-device — static estimate, a two-estimate time-varying window, and
+    a faulted run (the sender-side diagonal fold keeps the realized matrix
+    column-stochastic)."""
+    for name in ("dsgt_learned_pushsum", "dsgt_learned_timevarying"):
+        rec = equivalence[name]
+        assert rec["rounds_equal"] and rec["accuracy_bit_equal"], (name, rec)
+        assert rec["state_maxdiff"] < 1e-6, (name, rec)
+    rec = equivalence["dsgt_learned_faulty"]
+    assert rec["rounds_equal"] and rec["accuracy_maxdiff"] < 1e-5, rec
+    assert rec["state_maxdiff"] < 1e-6, rec
+
+
+@pytest.mark.slow
 def test_banded_topologies_gather_free(equivalence):
     """ISSUE 7 acceptance: banded/bounded-bandwidth graphs (ring, faulty
     ring, keep-masked ring, torus, circulant expander) never fall back to

@@ -520,3 +520,202 @@ def test_collective_probe_counters():
     assert snap["ppermutes"] == 3      # snapshot is a copy
     reset_mix_stats()
     assert mix_stats_snapshot()["ppermutes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 9: fingerprint cache-key hole + learned graphs + push-sum mixing
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_distinguishes_adjacency():
+    """Regression: two graphs with IDENTICAL W but different adjacency (any
+    builder at self_weight=1.0 yields W = I) must not collide in the
+    compiled-chunk cache — they differ in byte accounting, routing, and
+    fault masks. The old fingerprint hashed only ``weights.tobytes()``."""
+    t1 = topo_lib.group_clustered([[0, 1], [2, 3]], 4, bridge=False,
+                                  weighting="uniform", self_weight=1.0)
+    t2 = topo_lib.group_clustered([[0, 2], [1, 3]], 4, bridge=False,
+                                  weighting="uniform", self_weight=1.0)
+    assert np.array_equal(t1.weights, np.eye(4))
+    assert np.array_equal(t2.weights, np.eye(4))
+    assert t1.name == t2.name                      # same name, same W ...
+    assert not np.array_equal(t1.adjacency, t2.adjacency)
+    assert t1 != t2                                # ... still distinct keys
+    assert t1.fingerprint() != t2.fingerprint()
+
+
+def _learned_topology(M: int, k: int, seed: int):
+    rng = np.random.default_rng(seed)
+    learner = topo_lib.GraphLearner(M=M, k=k, sigma_dist=0.5, seed=seed)
+    return learner.estimate(rng.normal(size=(M, 20)).astype(np.float32))
+
+
+@_settings
+@given(st.integers(4, 16), st.integers(1, 4), st.integers(0, 5))
+def test_push_sum_converges_to_global_mean(M, k, seed):
+    """Push-sum's de-biased ratio x/w converges to the uniform average on a
+    learned (directed, column-stochastic, strongly-connected) graph — the
+    estimate plain averaging would bias toward high-in-degree nodes."""
+    from repro.topology import push_sum_debias, push_sum_mix
+    topo = _learned_topology(M, k, seed)
+    assert topo_lib.is_column_stochastic(topo.weights)
+    plan = make_plan(topo)
+    assert plan.push_sum
+    rng = np.random.default_rng(seed)
+    x0 = jnp.asarray(rng.normal(size=(M, 3)).astype(np.float32))
+    x, w = x0, jnp.ones((M,), jnp.float32)
+    for r in range(400):
+        x, w = push_sum_mix(x, w, plan, r)
+    est = np.asarray(push_sum_debias(x, w))
+    np.testing.assert_allclose(est, np.tile(np.mean(np.asarray(x0), axis=0),
+                                            (M, 1)), atol=1e-3)
+
+
+@_settings
+@given(st.integers(5, 20), st.integers(2, 4), st.integers(0, 5))
+def test_push_sum_reduces_to_symmetric(M, k, seed):
+    """On a doubly-stochastic W, push-sum IS the symmetric path: auto-detect
+    picks the standard plan, forcing push-sum keeps every weight scalar at 1
+    and the de-biased mix matches ``mix_stacked`` within float tolerance."""
+    from repro.topology import push_sum_debias, push_sum_mix
+    topo = _build("kregular", M, k, seed)
+    p_std = make_plan(topo)
+    p_ps = make_plan(topo, push_sum=True)
+    assert not p_std.push_sum and p_ps.push_sum
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(M, 4)).astype(np.float32))
+    a = np.asarray(mix_stacked(x, p_std))
+    b, w = push_sum_mix(x, jnp.ones((M,), jnp.float32), p_ps)
+    np.testing.assert_allclose(np.asarray(w), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(push_sum_debias(b, w)), a,
+                               atol=1e-5)
+
+
+@_settings
+@given(st.integers(4, 12), st.integers(1, 3), st.integers(0, 5))
+def test_push_sum_fault_fold_conserves_mass(M, k, seed):
+    """The fault fold under push-sum returns dropped mass to the SENDER's
+    diagonal (``out_w_np``): any symmetric keep realization leaves every
+    realized column summing to 1, so total mass and total weight are
+    conserved — the invariant the ratio estimate rests on."""
+    from repro.topology import push_sum_mix
+    topo = _learned_topology(M, k, seed)
+    plan = make_plan(topo)
+    rng = np.random.default_rng(seed + 99)
+    keep = np.ones((M, M), np.float32)
+    for _ in range(max(1, M // 2)):
+        i, j = rng.integers(M), rng.integers(M)
+        if i != j:
+            keep[i, j] = keep[j, i] = 0.0
+    x0 = jnp.asarray(rng.normal(size=(M, 2)).astype(np.float32))
+    x, w = push_sum_mix(x0, jnp.ones((M,), jnp.float32), plan, 0,
+                        key=jax.random.PRNGKey(0), keep=jnp.asarray(keep))
+    np.testing.assert_allclose(np.asarray(jnp.sum(x, axis=0)),
+                               np.asarray(jnp.sum(x0, axis=0)), atol=1e-4)
+    np.testing.assert_allclose(float(jnp.sum(w)), float(M), atol=1e-4)
+
+
+@_settings
+@given(st.integers(2, 20), st.integers(1, 6), st.integers(0, 5))
+def test_sparsify_row_stochastic_and_connected(M, k, seed):
+    """Learned sparsification always yields a row-stochastic trust matrix
+    whose (symmetric) support is connected — via fallback if the kNN graph
+    alone is not."""
+    from repro.topology import sparsify_similarity
+    rng = np.random.default_rng(seed)
+    d = np.abs(rng.normal(size=(M, M)))
+    d = d + d.T
+    np.fill_diagonal(d, 0)
+    trust, _ = sparsify_similarity(d, k)
+    assert np.all(trust >= 0)
+    np.testing.assert_allclose(trust.sum(axis=1), 1.0, atol=1e-9)
+    support = (trust > 0) & ~np.eye(M, dtype=bool)
+    assert is_connected(support | support.T)
+
+
+def test_sparsify_connectivity_fallback_triggers():
+    """Two far-apart clusters with k=1 give a disconnected kNN graph: the
+    ring-union fallback must fire and reconnect the support."""
+    from repro.topology import sparsify_similarity
+    d = np.full((6, 6), 1000.0)
+    for blk in (slice(0, 3), slice(3, 6)):
+        d[blk, blk] = 1.0
+    np.fill_diagonal(d, 0.0)
+    trust, fell_back = sparsify_similarity(d, 1)
+    assert fell_back
+    support = (trust > 0) & ~np.eye(6, dtype=bool)
+    assert is_connected(support | support.T)
+
+
+def test_make_plan_rejects_non_stochastic():
+    """A W that is neither row- nor column-stochastic is a bug in the
+    caller; make_plan refuses instead of silently mis-mixing."""
+    import dataclasses
+    topo = topo_lib.ring(6)
+    bad = dataclasses.replace(topo, weights=topo.weights * 0.5)
+    with pytest.raises(ValueError, match="row-stochastic"):
+        make_plan(bad)
+
+
+def test_graph_learner_ledger_epsilon_increases():
+    """Every re-estimation is one more release of the (DP-protected) client
+    weights: the ledger's ε must strictly increase across estimates."""
+    from repro.engine import PrivacyLedger
+    ledger = PrivacyLedger(sigma=1.0, delta=1e-5)
+    learner = topo_lib.GraphLearner(M=6, k=2, sigma_dist=2.0, seed=0)
+    rng = np.random.default_rng(0)
+    eps = [ledger.epsilon()]
+    for _ in range(3):
+        learner.estimate(rng.normal(size=(6, 10)).astype(np.float32),
+                         ledger=ledger)
+        eps.append(ledger.epsilon())
+    assert all(b > a for a, b in zip(eps, eps[1:])), eps
+    assert len(learner.history) == 3
+    assert len(learner.gap_trajectory) == 3
+
+
+def test_graph_learner_noiseless_release_is_honest():
+    """sigma_dist <= 0 means the distances are released without noise — the
+    ledger must report ε = ∞, not silently under-account."""
+    from repro.engine import PrivacyLedger
+    ledger = PrivacyLedger(sigma=1.0, delta=1e-5)
+    learner = topo_lib.GraphLearner(M=4, k=1, sigma_dist=0.0, seed=0)
+    learner.estimate(np.random.default_rng(0).normal(size=(4, 8))
+                     .astype(np.float32), ledger=ledger)
+    assert ledger.epsilon() == float("inf")
+
+
+def test_graph_learner_current_folds_time_varying():
+    """``current(window=n)`` folds the last n estimates as a
+    TimeVaryingTopology whose fingerprint is distinct per estimate set —
+    cache-correct across re-estimations."""
+    rng = np.random.default_rng(3)
+    learner = topo_lib.GraphLearner(M=6, k=2, sigma_dist=0.5, seed=3)
+    t0 = learner.estimate(rng.normal(size=(6, 12)).astype(np.float32))
+    assert learner.current() is t0
+    t1 = learner.estimate(rng.normal(size=(6, 12)).astype(np.float32))
+    tv = learner.current(window=2)
+    assert isinstance(tv, topo_lib.TimeVaryingTopology)
+    assert tv.period == 2 and tv.topologies == [t0, t1]
+    assert t0.fingerprint() != t1.fingerprint()
+    assert tv.fingerprint() != t0.fingerprint()
+    plan = make_plan(tv)
+    assert plan.push_sum and plan.period == 2
+
+
+def test_learned_dsgt_state_alignment():
+    """DSGT's push-sum state carry: entering a push-sum plan grows the (M,)
+    weight leaf at 1; leaving folds the bias back into x."""
+    from repro.baselines.dp_dsgt import DPDSGTStrategy
+    M = 6
+    strat = DPDSGTStrategy(feat_dim=4, num_classes=2, lr=0.3)
+    strat.set_topology(_learned_topology(M, 2, 0))
+    assert strat._mix_plan.push_sum
+    state = {"x": jnp.ones((M, 4)), "y": jnp.zeros((M, 4)),
+             "g": jnp.zeros((M, 4))}
+    state = strat.align_push_sum_state(state)
+    assert "w" in state and np.allclose(np.asarray(state["w"]), 1.0)
+    state["w"] = state["w"] * 2.0
+    strat.set_topology(topo_lib.ring(M))
+    back = strat.align_push_sum_state(state)
+    assert "w" not in back
+    np.testing.assert_allclose(np.asarray(back["x"]), 0.5, atol=1e-6)
