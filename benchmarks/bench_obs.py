@@ -1,0 +1,290 @@
+"""Telemetry overhead: rounds/sec with the obs subsystem off vs fully on
+(phase spans + chunk spans + the per-round metrics tap), plus a machine-
+checked record that telemetry *off* is provably free.
+
+Two gated working points mirror the repo's hot paths:
+
+  * sharded M=64 over the 8-fake-device CPU mesh (tap streamed host-side
+    from stacked chunk outputs — the shard_map trace stays tap-free);
+  * paged M=4096 with a 16-wide cohort (tap is an ordered in-jit
+    ``io_callback`` in the scanned round body).
+
+``--assert-overhead`` is the CI gate: tap+spans on must hold ≥95% of the
+off-throughput at both points (fails loudly with the measured ratios,
+mirroring bench_engine's ``--assert-crossover``), and the off-is-free
+record must pass (chunk-cache keys byte-identical with telemetry absent vs
+disabled, zero retraces when a disabled-telemetry engine reuses a warm
+cache, bit-exact History). Also writes a sample ``events.jsonl`` from a
+small evaluated DP run (ledger attached) for the CI artifact. Writes
+``BENCH_obs.json`` via ``benchmarks/run.py`` (or directly as a script).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    if "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        # must land before the first jax import below (sharded column)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+    # make `python benchmarks/bench_obs.py` work without PYTHONPATH
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.fedavg import FedAvgStrategy
+from repro.baselines.local import LocalStrategy
+from repro.engine import (ClientSampling, Engine, FederatedData,
+                          HostFederatedData, PagedEngine, PrivacyLedger,
+                          ShardedEngine, clear_chunk_cache)
+from repro.obs import Telemetry, probe_deltas
+
+LAST_RECORDS = []
+
+FEAT, CLASSES, R, BATCH = 8, 2, 8, 4
+COHORT = 16
+GATES = (("sharded", 64), ("paged", 4096))
+
+
+def _raw_data(M: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(CLASSES, FEAT)).astype(np.float32) * 3
+    ys = rng.integers(0, CLASSES, size=(M, R)).astype(np.int32)
+    xs = protos[ys] + rng.normal(size=(M, R, FEAT)).astype(np.float32) * 0.4
+    return xs, ys
+
+
+def _data(M: int) -> FederatedData:
+    xs, ys = _raw_data(M)
+    return FederatedData(xs, ys, jnp.asarray(xs), jnp.asarray(ys))
+
+
+def _host_data(M: int) -> HostFederatedData:
+    xs, ys = _raw_data(M)
+    return HostFederatedData(xs, ys, xs[:1], ys[:1])
+
+
+def _strategy() -> LocalStrategy:
+    return LocalStrategy(feat_dim=FEAT, num_classes=CLASSES, lr=0.5)
+
+
+def _fit_once(engine, data, rounds: int) -> None:
+    state, _ = engine.fit(data, rounds=rounds, key=jax.random.PRNGKey(7),
+                          batch_size=BATCH, evaluate=False)
+    jax.tree_util.tree_leaves(state)[0].block_until_ready()
+
+
+def _overhead(name, make_engine, data, rounds: int, tmp: str, extra=None,
+              repeats: int = 5):
+    """rounds/sec for telemetry=None vs a full-on Telemetry (spans + tap).
+    Off/on fits are timed alternately (best-of-N each) so load or clock
+    drift on a shared box hits both sides of the ratio equally."""
+    eng_off = make_engine(None)
+    tel = Telemetry(os.path.join(tmp, name), tap=True)
+    eng_on = make_engine(tel)
+    _fit_once(eng_off, data, rounds)      # compile + warm caches
+    _fit_once(eng_on, data, rounds)
+    best_off = best_on = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _fit_once(eng_off, data, rounds)
+        best_off = min(best_off, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _fit_once(eng_on, data, rounds)
+        best_on = min(best_on, time.perf_counter() - t0)
+    off, on = rounds / best_off, rounds / best_on
+    tel.close()
+    ratio = on / off
+    rec = {"name": f"obs_overhead_{name}",
+           "rounds_per_sec_off": round(off, 2),
+           "rounds_per_sec_on": round(on, 2),
+           "on_vs_off": round(ratio, 4), "rounds": rounds,
+           "feat": FEAT, "batch": BATCH}
+    rec.update(extra or {})
+    LAST_RECORDS.append(rec)
+    print(f"[obs] {name}: off={off:.1f} r/s, tap+spans on={on:.1f} r/s "
+          f"({ratio:.3f}x)", flush=True)
+    return (f"obs_{name}_on_rps", 1e6 / on, round(ratio, 3))
+
+
+def _off_is_free(rounds: int):
+    """Machine-checked zero-overhead-off record: disabled telemetry builds
+    the same chunk-cache key as no telemetry at all, reuses a warm compiled
+    chunk without retracing, and produces a bit-exact History."""
+    strategy = _strategy()
+    data = _data(16)
+    eng_plain = Engine(strategy, eval_every=rounds)
+    k_plain = eng_plain._chunk_key(rounds, BATCH)
+    k_none = Engine(strategy, eval_every=rounds,
+                    telemetry=Telemetry(None))._chunk_key(rounds, BATCH)
+    k_disabled_tap = Engine(
+        strategy, eval_every=rounds,
+        telemetry=Telemetry(None, tap=True))._chunk_key(rounds, BATCH)
+    keys_equal = (k_plain == k_none == k_disabled_tap)
+
+    clear_chunk_cache()
+    key = jax.random.PRNGKey(5)
+    state0, hist0 = eng_plain.fit(data, rounds=rounds, key=key,
+                                  batch_size=BATCH, evaluate=False)
+    with probe_deltas("engine.chunk_cache") as d:
+        state1, hist1 = Engine(
+            strategy, eval_every=rounds,
+            telemetry=Telemetry(None, tap=True)).fit(
+                data, rounds=rounds, key=key, batch_size=BATCH,
+                evaluate=False)
+    cache = d["engine.chunk_cache"]
+    bit_exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(state0),
+                        jax.tree_util.tree_leaves(state1)))
+    rec = {"name": "obs_off_is_free",
+           "chunk_key_unchanged": bool(keys_equal),
+           "warm_cache_retraces": int(cache.get("traces", 0)),
+           "warm_cache_hits": int(cache.get("hits", 0)),
+           "state_bit_exact": bool(bit_exact),
+           "passed": bool(keys_equal and cache.get("traces", 0) == 0
+                          and cache.get("hits", 0) > 0 and bit_exact)}
+    LAST_RECORDS.append(rec)
+    print(f"[obs] off-is-free: keys_unchanged={keys_equal} "
+          f"retraces={rec['warm_cache_retraces']} "
+          f"hits={rec['warm_cache_hits']} bit_exact={bit_exact} "
+          f"-> {'PASS' if rec['passed'] else 'FAIL'}", flush=True)
+    return ("obs_off_is_free", 0.0, "pass" if rec["passed"] else "FAIL")
+
+
+def _sample_events(out_path: str):
+    """A small evaluated DP run (ledger attached, tap + profiler capture on)
+    whose events.jsonl ships as the CI artifact."""
+    rounds, evals = 8, 4
+    strategy = FedAvgStrategy(feat_dim=FEAT, num_classes=CLASSES, lr=0.5,
+                              clip=1.0, sigma=0.7)
+    data = _data(16)
+    tmp = tempfile.mkdtemp(prefix="bench_obs_sample_")
+    try:
+        tel = Telemetry(os.path.join(tmp, "run"), tap=True, profile_chunk=1)
+        eng = Engine(strategy, eval_every=rounds // evals,
+                     ledger=PrivacyLedger(sigma=0.7, delta=1e-5),
+                     telemetry=tel)
+        eng.fit(data, rounds=rounds, key=jax.random.PRNGKey(11),
+                batch_size=BATCH)
+        tel.close()
+        shutil.copyfile(tel.events_path, out_path)
+        n = sum(1 for _ in open(out_path))
+        LAST_RECORDS.append({"name": "obs_sample_events",
+                             "path": os.path.basename(out_path),
+                             "events": n, "rounds": rounds})
+        print(f"[obs] sample events: {n} events -> {out_path}", flush=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(quick: bool = True):
+    rows = []
+    LAST_RECORDS.clear()
+    # long fits on purpose: the gate measures the *per-round* steady-state
+    # tax of tap+spans; per-phase fixed costs (one manifest write + three
+    # span/phase events per fit, ~1 ms total) amortize out here exactly as
+    # they do in a real run — at the toy ~0.13 ms/round they still need
+    # hundreds of rounds to drop below the 5% gate
+    rounds = 400 if quick else 800
+    n_dev = len(jax.devices())
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    try:
+        # gated point 1: sharded M=64 (tap streams host-side post-chunk —
+        # the shard_map trace and cache key are identical on/off)
+        M = 64
+        rows.append(_overhead(
+            "sharded_M64",
+            lambda tel: ShardedEngine(_strategy(), eval_every=rounds,
+                                      telemetry=tel),
+            _data(M), rounds, tmp, {"M": M, "devices": n_dev}))
+
+        # gated point 2: paged M=4096, 16-wide cohort (in-jit ordered
+        # io_callback per scanned round)
+        M = 4096
+        rows.append(_overhead(
+            "paged_M4096",
+            lambda tel: PagedEngine(
+                _strategy(), eval_every=rounds, telemetry=tel,
+                schedule=ClientSampling(q=COHORT / M, mode="fixed")),
+            _host_data(M), rounds, tmp, {"M": M, "cohort": COHORT}))
+
+        # context (ungated): the resident single-device engine — its toy
+        # linear round is so short (~0.15 ms) that even one io_callback per
+        # TAP_BLOCK rounds plus the blocked-scan restructuring is a visible
+        # fraction; on any real model the same absolute cost vanishes
+        M = 64
+        rows.append(_overhead(
+            "resident_M64",
+            lambda tel: Engine(_strategy(), eval_every=rounds,
+                               telemetry=tel),
+            _data(M), rounds, tmp,
+            {"M": M, "gated": False,
+             "note": "sub-ms toy rounds; absolute tap cost is per "
+                     "TAP_BLOCK rounds, relative cost shrinks with "
+                     "round duration"}))
+
+        rows.append(_off_is_free(rounds))
+        _sample_events(os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_obs_events.jsonl"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def main() -> None:
+    import json
+    quick = "--full" not in sys.argv[1:]
+    rows = run(quick=quick)
+    payload = {"platform": jax.default_backend(), "quick": quick,
+               "entries": LAST_RECORDS}
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_obs.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[obs] wrote {out}", flush=True)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if "--assert-overhead" in sys.argv[1:]:
+        # CI gate (ISSUE 10): tap+spans on keeps >= 95% of off-throughput
+        # at both gated working points, and telemetry off is provably free
+        ratios = {e["name"]: e["on_vs_off"] for e in LAST_RECORDS
+                  if "on_vs_off" in e}
+        failed = []
+        for kind, m in GATES:
+            key = f"obs_overhead_{kind}_M{m}"
+            r = ratios.get(key)
+            if r is None:
+                print(f"OVERHEAD GATE: missing entry {key}", file=sys.stderr)
+                sys.exit(2)
+            if r < 0.95:
+                failed.append(f"{key}={r:.3f}x")
+        free = next((e for e in LAST_RECORDS
+                     if e["name"] == "obs_off_is_free"), None)
+        if free is None or not free["passed"]:
+            failed.append(f"off_is_free={free}")
+        if failed:
+            print(f"OVERHEAD GATE FAILED: need >= 0.95x on/off and a "
+                  f"passing off-is-free record; got {failed} "
+                  f"(all ratios: {ratios})", file=sys.stderr)
+            sys.exit(1)
+        print(f"overhead gate passed: {ratios}, off-is-free OK")
+
+
+if __name__ == "__main__":
+    main()

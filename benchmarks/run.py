@@ -11,6 +11,7 @@
   bench_topology       (framework)     gossip loop vs graph family/density
   bench_population     (framework)     paged rounds/sec vs virtual M
   bench_resilience     (framework)     accuracy/overhead vs fault regime
+  bench_obs            (framework)     telemetry overhead + off-is-free
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale rounds.
 Suites exposing ``LAST_RECORDS`` also write ``BENCH_<suite>.json``.
@@ -38,9 +39,9 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_ablation, bench_engine, bench_heterogeneity,
-                            bench_kernels, bench_overhead, bench_population,
-                            bench_privacy, bench_resilience, bench_roofline,
-                            bench_schedule, bench_topology)
+                            bench_kernels, bench_obs, bench_overhead,
+                            bench_population, bench_privacy, bench_resilience,
+                            bench_roofline, bench_schedule, bench_topology)
     suites = {
         "kernels": bench_kernels,
         "engine": bench_engine,
@@ -53,6 +54,7 @@ def main() -> None:
         "privacy": bench_privacy,
         "ablation": bench_ablation,
         "heterogeneity": bench_heterogeneity,
+        "obs": bench_obs,
     }
     rows = []
     for name, mod in suites.items():

@@ -620,9 +620,11 @@ class P4Strategy(Strategy):
             from repro.topology.accounting import send_routed
             dist, next_hop = (self._routing if getattr(self, "_routing", None)
                               else (None, None))
+            from repro.resilience.processes import FAULT_STATS
             for g, (agg, ok, failed_over) in zip(
                     self.groups, self._host_failover_plan(r, faults)):
                 if not ok:
+                    FAULT_STATS["quorum_silent_rounds"] += 1
                     continue
                 senders = [i for i in g
                            if i != agg and (mask is None or mask[i] > 0)
@@ -632,6 +634,7 @@ class P4Strategy(Strategy):
                 if failed_over:
                     self.failover_count = getattr(self, "failover_count",
                                                   0) + 1
+                    FAULT_STATS["failover_rounds"] += 1
                 payload = jax.tree_util.tree_map(lambda t: t[g[0]],
                                                  states["proxy"])
                 for i in senders:

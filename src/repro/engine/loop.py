@@ -38,6 +38,7 @@ from repro.engine.accounting import PrivacyLedger
 from repro.engine.schedule import (FullParticipation, RoundSchedule,
                                    sample_client_batches)
 from repro.engine.strategy import (FederatedData, Strategy, runtime_params)
+from repro.obs.probes import Probe
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +53,10 @@ from repro.engine.strategy import (FederatedData, Strategy, runtime_params)
 
 CHUNK_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
 CHUNK_CACHE_MAX = 128
-CHUNK_STATS = {"traces": 0, "hits": 0, "misses": 0}
+# a registry-backed Probe (still a dict: every existing read/increment works
+# verbatim) — ``repro.obs.probe_deltas("engine.chunk_cache")`` scopes it
+CHUNK_STATS = Probe("engine.chunk_cache", {"traces": 0, "hits": 0,
+                                           "misses": 0})
 
 
 def clear_chunk_cache() -> None:
@@ -82,11 +86,32 @@ class History:
     accuracy: List[float] = field(default_factory=list)
     metrics: Dict[str, List[float]] = field(default_factory=dict)
 
+    @staticmethod
+    def _scalar(key: str, v) -> float:
+        """Validate one recorded value: plain scalars and 0-d arrays pass;
+        anything else (stray (1,)-arrays, traced values, objects) raises
+        naming the offending metric key instead of dying with an opaque
+        ``TypeError`` deep in the loop."""
+        if isinstance(v, (bool, int, float)):
+            return float(v)
+        try:
+            arr = np.asarray(v)
+        except Exception as e:  # e.g. a jax tracer leaking out of a jit
+            raise TypeError(
+                f"History.record: metric {key!r} is not a concrete scalar "
+                f"(got {type(v).__name__}: {v!r})") from e
+        if arr.ndim == 0 and arr.dtype != object:
+            return float(arr)
+        raise TypeError(
+            f"History.record: metric {key!r} must be a scalar or 0-d array, "
+            f"got shape {arr.shape} dtype {arr.dtype} — reduce it (e.g. "
+            f"jnp.mean) before recording")
+
     def record(self, r: int, acc: float, metrics: Optional[Dict[str, float]] = None):
         self.rounds.append(int(r))
-        self.accuracy.append(float(acc))
+        self.accuracy.append(self._scalar("accuracy", acc))
         for k, v in (metrics or {}).items():
-            self.metrics.setdefault(k, []).append(float(v))
+            self.metrics.setdefault(k, []).append(self._scalar(k, v))
 
     def as_tuples(self) -> List[Tuple[int, float]]:
         """Legacy ``[(round, mean_accuracy)]`` shape used by benchmarks."""
@@ -138,6 +163,12 @@ class Engine:
                         and host-side replay re-derives the exact masks for
                         byte accounting and crash-resume fast-forward.
       checkpoint_keep — retain only the newest k checkpoints (0 = keep all).
+      telemetry       — a ``repro.obs.Telemetry``; spans chunk dispatch,
+                        streams eval/tap events to the run directory's
+                        ``events.jsonl`` and maintains ``manifest.json``.
+                        ``None`` (or a disabled Telemetry) is provably free:
+                        the engine takes the exact pre-telemetry code path
+                        and chunk-cache keys/traces are unchanged.
     """
     strategy: Strategy
     eval_every: int = 20
@@ -147,10 +178,26 @@ class Engine:
     ledger: Optional[PrivacyLedger] = None
     faults: Optional[Any] = None
     checkpoint_keep: int = 0
+    telemetry: Optional[Any] = None
+
+    # whether the opt-in metrics tap is inserted INTO the traced round body
+    # (io_callback). ShardedEngine keeps its shard_map trace tap-free and
+    # streams the same events host-side from the stacked chunk outputs.
+    _tap_in_jit = True
 
     def __post_init__(self):
         if self.schedule is None:
             self.schedule = FullParticipation()
+
+    # ------------------------------------------------------- telemetry seams
+    def _telemetry_on(self):
+        tel = self.telemetry
+        return tel if (tel is not None and tel.enabled) else None
+
+    def _tap_traced(self) -> bool:
+        """True when the in-jit tap is part of this engine's chunk trace."""
+        tel = self._telemetry_on()
+        return bool(tel is not None and tel.tap and self._tap_in_jit)
 
     # ------------------------------------------------------------------
     def _chunk_key(self, length: int, batch_size: Optional[int]) -> Tuple:
@@ -158,11 +205,16 @@ class Engine:
         Strategy/schedule fingerprints carry cache_token, groups, lr, DP
         on/off, ... — σ is deliberately absent (runtime argument); the
         runtime-param *keys* are in (their presence gates noise ops)."""
-        return (self.strategy.fingerprint(), self.schedule.fingerprint(),
+        base = (self.strategy.fingerprint(), self.schedule.fingerprint(),
                 length, batch_size,
                 tuple(sorted(self.strategy.runtime_params())),
                 None if self.faults is None else self.faults.fingerprint(),
                 self._mesh_fingerprint())
+        # the in-jit tap is part of the traced computation, so it is part of
+        # the key — but ONLY when on: with telemetry off/absent the key is
+        # byte-identical to the pre-telemetry key (the zero-overhead-off
+        # contract the equivalence tier locks)
+        return base + (("tap",) if self._tap_traced() else ())
 
     def _mesh_fingerprint(self) -> Tuple:
         return ()   # single-device loop; ShardedEngine adds (axis, n, M)
@@ -179,6 +231,10 @@ class Engine:
         if self.faults is not None:
             from repro.resilience import wrap_round_body
             body = wrap_round_body(body, self.faults)
+        tap = None
+        if self._tap_traced():
+            from repro.obs.telemetry import tap_scan
+            tap = tap_scan
 
         def run(state, phase_key, train_x, train_y, start, rt):
             CHUNK_STATS["traces"] += 1   # python body executes per trace only
@@ -186,8 +242,10 @@ class Engine:
                 def scan_body(state, r):
                     return body(state, r, phase_key, train_x, train_y)
 
-                return jax.lax.scan(scan_body, state,
-                                    start + jnp.arange(length))
+                rs = start + jnp.arange(length)
+                if tap is not None:
+                    return tap(scan_body, state, rs, rt)
+                return jax.lax.scan(scan_body, state, rs)
 
         fn = jax.jit(run, donate_argnums=0)
         _cache_put(key_, fn)
@@ -201,18 +259,54 @@ class Engine:
         sampling schedule (empty dict otherwise)."""
         if stop <= start:
             return state, {}, {}
-        fn = self._chunk_fn(stop - start, batch_size, data)
+        fn = self._build_chunk(self._chunk_fn, stop - start, batch_size, data)
         train_x, train_y = self._train_arrays(data)
         rt = {k: jnp.asarray(v, jnp.float32)
               for k, v in self.strategy.runtime_params().items()}
         carry = state if self.faults is None else (state, self._fault_state)
-        carry, (metrics, aux) = fn(carry, phase_key, train_x, train_y,
-                                   jnp.asarray(start, jnp.int32), rt)
+        carry, (metrics, aux) = self._dispatch_chunk(
+            fn, (carry, phase_key, train_x, train_y,
+                 jnp.asarray(start, jnp.int32), rt),
+            start, stop, rt)
         if self.faults is None:
             state = carry
         else:
             state, self._fault_state = carry
         return state, metrics, aux
+
+    # ----------------------------------------------------- telemetry dispatch
+    def _build_chunk(self, builder, *args):
+        """Chunk lookup/build, spanned when telemetry is on (cache hits show
+        up as ~0-cost build spans; the trace itself lands in the execute
+        span of the first dispatch)."""
+        tel = self._telemetry_on()
+        if tel is None:
+            return builder(*args)
+        with tel.span("chunk/build"):
+            return builder(*args)
+
+    def _dispatch_chunk(self, fn, args, start: int, stop: int, rt=None):
+        """Execute one compiled chunk. Telemetry off: a bare call, nothing
+        added. Telemetry on: the chunk span (trace-vs-execute split via the
+        chunk-cache probe, optional Nth-chunk profiler capture) wraps the
+        call, the tap's io_callbacks route to this run's sink, and engines
+        whose trace is tap-free (sharded) stream the per-round events from
+        the stacked outputs instead."""
+        tel = self._telemetry_on()
+        if tel is None:
+            return fn(*args)
+        with tel.activate(), tel.chunk_span(start=int(start), stop=int(stop)):
+            out = fn(*args)
+            jax.block_until_ready(out)
+            if tel.tap and self._tap_in_jit:
+                # callbacks ride XLA's host-callback thread: drain them while
+                # this run's sink is still the active one
+                jax.effects_barrier()
+        if tel.tap and not self._tap_in_jit:
+            _, (metrics, aux) = out
+            tel.emit_tap_stacked(int(start), int(stop) - int(start),
+                                 metrics, aux, rt)
+        return out
 
     # ------------------------------------------------- sharded-engine seams
     def _train_arrays(self, data: FederatedData):
@@ -335,6 +429,10 @@ class Engine:
             self._fault_state = fault_state_at(self.faults, phase_key,
                                                self._fault_origin, start_round)
 
+        tel = self._telemetry_on()
+        if tel is not None:
+            tel.begin_phase(self._phase_info(rounds, start_round, batch_size))
+
         boundaries = (eval_rounds(start_round, rounds, self.eval_every)
                       if evaluate else [])
         cursor = start_round
@@ -358,6 +456,11 @@ class Engine:
             if self.ledger is not None:
                 chunk_means.update(self.ledger.metrics())
             history.record(ev, jnp.mean(acc), chunk_means)
+            if tel is not None:
+                # copied from the History entry AFTER recording, so the
+                # JSONL trajectory matches the returned History exactly
+                tel.eval_event(ev, history.accuracy[-1],
+                               {k: v[-1] for k, v in history.metrics.items()})
             if self.checkpoint_dir:
                 self._save_checkpoint(ev, state, history)
         if cursor < rounds:  # tail (or the whole phase when evaluate=False)
@@ -367,7 +470,35 @@ class Engine:
                               aux.get("participation"), phase_key)
             if self.ledger is not None:
                 self.ledger.advance(rounds - cursor)
+        if tel is not None:
+            tel.end_phase()
         return self._finalize_state(state), history
+
+    def _phase_info(self, rounds: int, start_round: int,
+                    batch_size: Optional[int]) -> Dict[str, Any]:
+        """The run manifest's identity record for one ``fit`` phase."""
+        import hashlib
+
+        def fp(x):
+            s = str(x)
+            return {"sha1": hashlib.sha1(s.encode()).hexdigest()[:12],
+                    "repr": s[:2000]}
+
+        info = {"engine": type(self).__name__,
+                "strategy": type(self.strategy).__name__,
+                "schedule": type(self.schedule).__name__,
+                "rounds": int(rounds), "start_round": int(start_round),
+                "batch_size": None if batch_size is None else int(batch_size),
+                "eval_every": int(self.eval_every),
+                "mesh": str(self._mesh_fingerprint()),
+                "strategy_fingerprint": fp(self.strategy.fingerprint()),
+                "schedule_fingerprint": fp(self.schedule.fingerprint()),
+                "faults": (None if self.faults is None
+                           else str(self.faults.fingerprint()))}
+        topo = getattr(self.strategy, "topology", None)
+        if topo is not None and hasattr(topo, "fingerprint"):
+            info["topology_fingerprint"] = fp(topo.fingerprint())
+        return info
 
     # ------------------------------------------------------------------
     def _log_network(self, state, first_round: int, last_round: int,

@@ -51,6 +51,14 @@ import numpy as np
 from repro.engine.loop import CHUNK_STATS, Engine, _cache_get, _cache_put
 from repro.engine.schedule import ClientSampling
 from repro.engine.strategy import FederatedData, runtime_params
+from repro.obs.probes import Probe
+
+# process-wide twin of the per-instance ``CohortPrefetcher.stats`` dicts:
+# ``misses`` are prefetch stalls (the chunk gathers synchronously), ``stale``
+# are version-mismatch re-gathers — scoped per run via
+# ``repro.obs.probe_deltas("engine.prefetch")``
+PREFETCH_STATS = Probe("engine.prefetch", {"submitted": 0, "hits": 0,
+                                           "misses": 0, "stale": 0})
 
 
 @dataclass(eq=False)
@@ -289,6 +297,7 @@ class CohortPrefetcher:
         self._tag = tag
         self._fut = self._pool.submit(fn)
         self.stats["submitted"] += 1
+        PREFETCH_STATS["submitted"] += 1
 
     def take(self, tag):
         """The prefetched payload for ``tag``, or None on a prediction miss
@@ -299,13 +308,16 @@ class CohortPrefetcher:
             if fut is not None:
                 fut.cancel()
             self.stats["misses"] += 1
+            PREFETCH_STATS["misses"] += 1
             return None
         try:
             out = fut.result()
         except Exception:
             self.stats["misses"] += 1
+            PREFETCH_STATS["misses"] += 1
             return None
         self.stats["hits"] += 1
+        PREFETCH_STATS["hits"] += 1
         return out
 
     def close(self) -> None:
@@ -428,6 +440,7 @@ class PagedEngine(Engine):
             payload = self._gather_payload(gather_ids)
         elif payload["version"] != self._pop.version:
             self._prefetcher.stats["stale"] += 1
+            PREFETCH_STATS["stale"] += 1
             payload["state"] = self._pop.gather(gather_ids)
             payload["version"] = self._pop.version
         return payload
@@ -445,6 +458,10 @@ class PagedEngine(Engine):
         if self.faults is not None:
             from repro.resilience import wrap_round_body
             body = wrap_round_body(body, self.faults)
+        tap = None
+        if self._tap_traced():
+            from repro.obs.telemetry import tap_scan
+            tap = tap_scan
 
         def run(state, phase_key, ids, valid, train_x, train_y, start, rt):
             CHUNK_STATS["traces"] += 1
@@ -452,8 +469,10 @@ class PagedEngine(Engine):
                 def scan_body(state, r):
                     return body(state, r, phase_key, train_x, train_y)
 
-                return jax.lax.scan(scan_body, state,
-                                    start + jnp.arange(length))
+                rs = start + jnp.arange(length)
+                if tap is not None:
+                    return tap(scan_body, state, rs, rt)
+                return jax.lax.scan(scan_body, state, rs)
 
         fn = jax.jit(run, donate_argnums=0)
         _cache_put(key_, fn)
@@ -501,17 +520,20 @@ class PagedEngine(Engine):
         carry = (compact_state if self.faults is None
                  else (compact_state, self._fault_state))
         if paged:
-            fn = self._chunk_fn_paged(stop - start, batch_size, C)
-            carry, (metrics, aux) = fn(carry, phase_key,
-                                       jnp.asarray(ids_pad),
-                                       jnp.asarray(
-                                           (ids_pad < M).astype(np.float32)),
-                                       train_x, train_y,
-                                       jnp.asarray(start, jnp.int32), rt)
+            fn = self._build_chunk(self._chunk_fn_paged, stop - start,
+                                   batch_size, C)
+            carry, (metrics, aux) = self._dispatch_chunk(
+                fn, (carry, phase_key, jnp.asarray(ids_pad),
+                     jnp.asarray((ids_pad < M).astype(np.float32)),
+                     train_x, train_y, jnp.asarray(start, jnp.int32), rt),
+                start, stop, rt)
         else:
-            fn = self._chunk_fn(stop - start, batch_size, data)
-            carry, (metrics, aux) = fn(carry, phase_key, train_x, train_y,
-                                       jnp.asarray(start, jnp.int32), rt)
+            fn = self._build_chunk(self._chunk_fn, stop - start, batch_size,
+                                   data)
+            carry, (metrics, aux) = self._dispatch_chunk(
+                fn, (carry, phase_key, train_x, train_y,
+                     jnp.asarray(start, jnp.int32), rt),
+                start, stop, rt)
         if self.faults is None:
             out_state = carry
         else:

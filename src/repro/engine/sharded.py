@@ -197,6 +197,12 @@ class ShardedEngine(Engine):
     mesh: Optional[Any] = None
     client_axis: str = CLIENT_AXIS
 
+    # the shard_map trace stays tap-free (callbacks inside the region would
+    # fire once per device); the telemetry tap streams the same per-round
+    # events host-side from the chunk's stacked outputs instead, so tap
+    # on/off never changes the sharded trace or its cache key
+    _tap_in_jit = False
+
     def __post_init__(self):
         super().__post_init__()
         if self.mesh is None:

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import KernelConfig
+from repro.obs.probes import Probe
 from repro.kernels.dp_clip import kernel as dp_kernel, ops as dp_ops, ref as dp_ref
 from repro.kernels.dp_round import (kernel as dpr_kernel, ops as dpr_ops,
                                     ref as dpr_ref)
@@ -69,12 +70,17 @@ def resolve_backend(requested: str = "auto", platform: Optional[str] = None) -> 
 
 _TuneKey = Tuple[str, Tuple[int, ...], str, str]
 _TUNE_CACHE: Dict[_TuneKey, Tuple[int, ...]] = {}
-_TUNE_STATS = {"hits": 0, "misses": 0}
+# registry-backed probe (see repro.obs): hit/miss tallies plus the search
+# cost itself — how many candidate tilings were timed and the wall-clock
+# seconds the searches spent, per scope via probe_deltas("kernels.autotune")
+_TUNE_STATS = Probe("kernels.autotune", {"hits": 0, "misses": 0,
+                                         "candidates_timed": 0,
+                                         "search_seconds": 0.0})
 
 
 def clear_autotune_cache() -> None:
     _TUNE_CACHE.clear()
-    _TUNE_STATS["hits"] = _TUNE_STATS["misses"] = 0
+    _TUNE_STATS.reset()
 
 
 def autotune_cache_stats() -> Dict[str, int]:
@@ -96,14 +102,17 @@ def autotune(kernel_name: str, shape: Sequence[int], dtype, backend: str,
         _TUNE_STATS["hits"] += 1
         return _TUNE_CACHE[key]
     _TUNE_STATS["misses"] += 1
+    search_t0 = time.perf_counter()
     best, best_t = None, float("inf")
     for cand in candidates:
         try:
             t = min(float(time_fn(cand)) for _ in range(max(1, trials)))
         except Exception:
             continue
+        _TUNE_STATS["candidates_timed"] += 1
         if t < best_t:
             best, best_t = tuple(cand), t
+    _TUNE_STATS["search_seconds"] += time.perf_counter() - search_t0
     if best is None:
         best = tuple(candidates[0])
     _TUNE_CACHE[key] = best

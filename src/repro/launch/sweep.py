@@ -48,7 +48,8 @@ def privacy_sweep(args) -> None:
     from repro.config import (DPConfig, P4Config, RunConfig, ScheduleConfig,
                               TrainConfig)
     from repro.core.p4 import P4Trainer
-    from repro.engine import CHUNK_STATS, clear_chunk_cache
+    from repro.engine import clear_chunk_cache
+    from repro.obs import probe_deltas
 
     mesh = None
     if args.sharded:
@@ -78,14 +79,14 @@ def privacy_sweep(args) -> None:
                     train=TrainConfig(learning_rate=0.5), schedule=sched)
                 tr = P4Trainer(feat_dim=feat, num_classes=classes, cfg=cfg)
                 t0 = time.time()
-                stats0 = dict(CHUNK_STATS)
-                _, _, hist = tr.fit(X, Y, tx, ty, rounds=rounds,
-                                    eval_every=max(rounds - 1, 1),
-                                    batch_size=batch,
-                                    target_epsilon=float(eps), mesh=mesh)
                 # THIS point's cache behavior (points after the first should
                 # be pure hits), not the cumulative global counters
-                cache = {k: CHUNK_STATS[k] - stats0[k] for k in CHUNK_STATS}
+                with probe_deltas("engine.chunk_cache") as deltas:
+                    _, _, hist = tr.fit(X, Y, tx, ty, rounds=rounds,
+                                        eval_every=max(rounds - 1, 1),
+                                        batch_size=batch,
+                                        target_epsilon=float(eps), mesh=mesh)
+                cache = deltas["engine.chunk_cache"]
                 rec = {"mode": "privacy", "epsilon_target": float(eps),
                        "client_rate": float(q), "sigma": round(tr.sigma, 4),
                        # the ledger's record IS the budget — no re-derivation

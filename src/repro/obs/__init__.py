@@ -1,0 +1,13 @@
+"""Observability: unified counter probes, phase spans, a JSONL event
+stream, and an opt-in in-jit metrics tap — with a zero-overhead-off
+guarantee (telemetry absent or disabled changes nothing: no files, no
+spans, unchanged chunk-cache keys, bit-identical traces)."""
+from repro.obs.probes import (Probe, ProbeRegistry, REGISTRY, get_probe,
+                              probe_deltas, probe_snapshot, reset_probes)
+from repro.obs.telemetry import (Telemetry, current_telemetry, tap_scan)
+
+__all__ = [
+    "Probe", "ProbeRegistry", "REGISTRY", "get_probe", "probe_deltas",
+    "probe_snapshot", "reset_probes", "Telemetry", "current_telemetry",
+    "tap_scan",
+]

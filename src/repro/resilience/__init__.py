@@ -1,4 +1,4 @@
-from repro.resilience.processes import (ActiveFaults, FaultModel,
+from repro.resilience.processes import (ActiveFaults, FAULT_STATS, FaultModel,
                                         FaultProcess, FaultRealization,
                                         FaultState, HostFaults,
                                         RESILIENCE_STREAM, active_faults,
@@ -8,8 +8,9 @@ from repro.resilience.processes import (ActiveFaults, FaultModel,
                                         wrap_round_body)
 
 __all__ = [
-    "ActiveFaults", "FaultModel", "FaultProcess", "FaultRealization",
-    "FaultState", "HostFaults", "RESILIENCE_STREAM", "active_faults",
-    "current_faults", "fault_state_at", "gilbert_elliott_rates",
-    "host_realizations", "make_fault_process", "wrap_round_body",
+    "ActiveFaults", "FAULT_STATS", "FaultModel", "FaultProcess",
+    "FaultRealization", "FaultState", "HostFaults", "RESILIENCE_STREAM",
+    "active_faults", "current_faults", "fault_state_at",
+    "gilbert_elliott_rates", "host_realizations", "make_fault_process",
+    "wrap_round_body",
 ]

@@ -45,7 +45,23 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, NamedTuple, Tuple
 
+from repro.obs.probes import Probe
+
 RESILIENCE_STREAM = 0x71
+
+# Registry-backed fault/failover event tallies (see repro.obs). Counted on
+# the HOST replay path — the traced chains are bit-identical replays of the
+# same transitions, so these are exact event counts for every run that logs
+# communication or resumes, at zero traced cost. ``failover_rounds`` /
+# ``quorum_silent_rounds`` are bumped by the P4 rotating-aggregator
+# accounting when a group runs on a stand-in or falls silent below quorum.
+FAULT_STATS = Probe("resilience.faults", {
+    "replayed_rounds": 0,
+    "down_client_rounds": 0,   # Σ over replayed rounds of clients down
+    "slow_client_rounds": 0,   # Σ over replayed rounds of straggling clients
+    "failover_rounds": 0,
+    "quorum_silent_rounds": 0,
+})
 
 
 # ---------------------------------------------------------------------------
@@ -325,7 +341,11 @@ def _replay_entry(process: FaultProcess, phase_key, origin: int, upto: int):
         r = ent["round"]
         ent["state"], real = process.step(
             ent["state"], r, process.round_key(phase_key, r))
-        ent["reals"].append(HostFaults(real, process.model))
+        hf = HostFaults(real, process.model)
+        FAULT_STATS["replayed_rounds"] += 1
+        FAULT_STATS["down_client_rounds"] += int((hf.up <= 0).sum())
+        FAULT_STATS["slow_client_rounds"] += int((hf.slow > 0).sum())
+        ent["reals"].append(hf)
         ent["round"] += 1
     return ent
 

@@ -41,6 +41,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs.probes import Probe
+
 # ---------------------------------------------------------------------------
 # Host-side: weight construction + graph diagnostics (numpy only — graphs.py
 # imports these at module load, before jax is necessarily initialized)
@@ -481,21 +483,24 @@ def push_sum_debias(tree, weights):
 # The scanned round body traces once per compiled chunk, so a snapshot delta
 # around a sharded run counts collectives PER ROUND — the sharded equivalence
 # tier asserts 0 all_gathers/round for banded/clustered/torus families.
-MIX_STATS = {
+# A registry-backed Probe (still a plain dict to every existing caller).
+# Nothing here auto-resets between Engine instances — counters accumulate
+# for the life of the process — so per-run numbers go through the scoped
+# API: ``repro.obs.probe_deltas("topology.mix")``.
+MIX_STATS = Probe("topology.mix", {
     "calls": 0,
     "path_identity": 0, "path_local": 0, "path_halo": 0, "path_gather": 0,
     "all_gathers": 0,   # gather-fallback all_gather collectives (one per leaf)
     "ppermutes": 0,     # halo-exchange ppermute collectives (leaf × hop)
-}
+})
 
 
 def mix_stats_snapshot():
-    return dict(MIX_STATS)
+    return MIX_STATS.snapshot()
 
 
 def reset_mix_stats() -> None:
-    for k in MIX_STATS:
-        MIX_STATS[k] = 0
+    MIX_STATS.reset()
 
 
 def edges_shard_resident(plan: MixPlan, ctx) -> bool:

@@ -401,6 +401,49 @@ def main() -> None:
     compare_paged("paged_mesh_fedavg_sampling", mk_fedavg(),
                   schedule=lambda: ClientSampling(q=0.6), mesh=mesh8)
 
+    # -------- telemetry: off ≡ never-constructed, tap-on ≡ untapped ---------
+    # ISSUE 10 zero-overhead-off contract on the sharded path: a disabled
+    # Telemetry must leave the chunk-cache key and every result bit-exact;
+    # an ENABLED tap must too (the sharded trace stays tap-free — per-round
+    # events stream host-side from the stacked chunk outputs)
+    import tempfile
+
+    from repro.obs import Telemetry
+
+    def mk_tel_strat():
+        return LocalStrategy(feat_dim=feat, num_classes=classes, lr=0.5,
+                             dp_cfg=dp, sigma=0.7)
+
+    st_ref, h_ref = Engine(mk_tel_strat(), eval_every=3).fit(
+        data8, rounds=8, key=key, batch_size=8)
+    eng_plain = ShardedEngine(mk_tel_strat(), eval_every=3, mesh=mesh8)
+    eng_off = ShardedEngine(mk_tel_strat(), eval_every=3, mesh=mesh8,
+                            telemetry=Telemetry(None, tap=True))
+    tap_dir = tempfile.mkdtemp(prefix="obs_equiv_")
+    tel_on = Telemetry(tap_dir, tap=True)
+    eng_on = ShardedEngine(mk_tel_strat(), eval_every=3, mesh=mesh8,
+                           telemetry=tel_on)
+    keys_equal = (eng_plain._chunk_key(8, 8) == eng_off._chunk_key(8, 8)
+                  == eng_on._chunk_key(8, 8))
+    st_off, h_off = eng_off.fit(data8, rounds=8, key=key, batch_size=8)
+    st_on, h_on = eng_on.fit(data8, rounds=8, key=key, batch_size=8)
+    tel_on.close()
+    with open(tel_on.events_path) as f:
+        tap_rounds = sorted(json.loads(line)["round"] for line in f
+                            if line.strip()
+                            and json.loads(line).get("type") == "tap")
+    results["telemetry_off_sharded"] = {
+        "chunk_key_unchanged": bool(keys_equal),
+        "rounds_equal": h_ref.rounds == h_off.rounds == h_on.rounds,
+        "accuracy_bit_equal": (h_ref.accuracy == h_off.accuracy
+                               == h_on.accuracy),
+        "state_bit_equal": (tree_bit_equal(st_ref, st_off)
+                            and tree_bit_equal(st_ref, st_on)),
+        "state_maxdiff": max(tree_maxdiff(st_ref, st_off),
+                             tree_maxdiff(st_ref, st_on)),
+        "tap_rounds": tap_rounds,
+    }
+
     # ---------------- P4 end-to-end: bootstrap -> grouping -> co-train ------
     protos2 = rng.normal(size=(2, 4, 20)).astype(np.float32) * 2
     protos2[0, :, 10:] = 0

@@ -315,6 +315,20 @@ def test_paged_engine_cohort_mesh(equivalence):
 
 
 @pytest.mark.slow
+def test_telemetry_off_and_tap_on_equivalence(equivalence):
+    """ISSUE 10 zero-overhead-off contract on the sharded path: a disabled
+    Telemetry builds the unchanged chunk-cache key and is bit-exact with no
+    telemetry at all — and an ENABLED tap is bit-exact too, because the
+    sharded trace stays tap-free (per-round events stream host-side from
+    the stacked chunk outputs, covering every round exactly once)."""
+    rec = equivalence["telemetry_off_sharded"]
+    assert rec["chunk_key_unchanged"], rec
+    assert rec["rounds_equal"] and rec["accuracy_bit_equal"], rec
+    assert rec["state_bit_equal"], rec
+    assert rec["tap_rounds"] == list(range(8)), rec
+
+
+@pytest.mark.slow
 def test_p4_end_to_end_bit_exact(equivalence):
     """Whole trainer pipeline under a client mesh: bootstrap, host-side
     greedy grouping (identical groups — the bootstrap states are bit-exact),
